@@ -1,0 +1,86 @@
+"""2.5D Cannon benchmark (beyond-paper, DBCSR lineage ref [10]).
+
+Measures 2D Cannon on a flat 4x4 grid vs 2.5D Cannon on a (2, 2x2... )
+— here (2, 4, 4): 2 replicas of a 4x4 grid — for the same global
+matrix.  The 2.5D variant executes half the shift steps per replica at
+the cost of replicated operands plus one C-reduction over the stack
+(pod) axis: per-device shift volume halves, which is exactly the
+multi-pod production-mesh story (EXPERIMENTS.md §Perf A-3's pod-axis
+halving, isolated to the engine).
+
+Analytic per-device communication (fp32, n x n, grid side P=4, c=2):
+  cannon 2D : 2 shifts/step x P steps x n^2/P^2 x 4B
+  cannon 2.5D: same shifts x P/c steps + allreduce(n^2/P^2)
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=32")
+
+import json
+import time
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.blocking import GridSpec
+from repro.core.cannon import cannon_matmul
+from repro.core.cannon25d import cannon25d_matmul
+from repro.launch.mesh import make_mesh
+
+
+def timed(fn, *args, reps=5):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def main(n=1408, out="artifacts/bench"):
+    rng = np.random.RandomState(0)
+    A = rng.randn(n, n).astype(np.float32)
+    B = rng.randn(n, n).astype(np.float32)
+    ref = A @ B
+    results = []
+
+    # --- flat 2D Cannon on 4x4 (16 devices) ---------------------------
+    mesh2d = make_mesh((4, 4), ("data", "model"))
+    grid2d = GridSpec("data", "model")
+    sh = NamedSharding(mesh2d, P("data", "model"))
+    Ad, Bd = jax.device_put(A, sh), jax.device_put(B, sh)
+    t2d = timed(jax.jit(lambda a, b: cannon_matmul(
+        a, b, mesh=mesh2d, grid=grid2d)), Ad, Bd)
+    vol2d = 2 * 4 * (n * n // 16) * 4  # 2 operands x P steps x block x 4B
+    results.append({"algo": "cannon2d", "devices": 16, "time_s": t2d,
+                    "comm_bytes_per_dev": vol2d})
+    print(f"cannon 2D  (4x4):    {t2d*1e3:8.2f} ms  "
+          f"shift vol/dev {vol2d/2**20:.1f} MiB")
+
+    # --- 2.5D on (2, 4, 4): same 4x4 grid, 2 replicas ------------------
+    mesh3d = make_mesh((2, 4, 4), ("pod", "data", "model"))
+    grid3d = GridSpec("data", "model", stack_axis="pod")
+    sh3 = NamedSharding(mesh3d, P("data", "model"))
+    A3, B3 = jax.device_put(A, sh3), jax.device_put(B, sh3)
+    for reduce in ("all_reduce", "reduce_scatter"):
+        t25 = timed(jax.jit(lambda a, b, r=reduce: cannon25d_matmul(
+            a, b, mesh=mesh3d, grid=grid3d, reduce=r)), A3, B3)
+        blk = n * n // 16
+        vol25 = 2 * 2 * blk * 4 + 2 * blk * 4  # half the shifts + C allreduce
+        c = cannon25d_matmul(A3, B3, mesh=mesh3d, grid=grid3d, reduce="all_reduce")
+        err = float(np.max(np.abs(np.asarray(c) - ref)))
+        results.append({"algo": f"cannon25d_{reduce}", "devices": 32,
+                        "time_s": t25, "comm_bytes_per_dev": vol25,
+                        "max_err": err})
+        print(f"cannon 2.5D ({reduce:14s}): {t25*1e3:8.2f} ms  "
+              f"shift+reduce vol/dev {vol25/2**20:.1f} MiB  err {err:.1e}")
+
+    print("\n2.5D halves the per-device shift volume (2 steps vs 4) at the "
+          "cost of 2x operand replication — the pod-axis production story.")
+    os.makedirs(out, exist_ok=True)
+    with open(os.path.join(out, "cannon25d.json"), "w") as f:
+        json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

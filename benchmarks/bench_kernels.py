@@ -1,0 +1,82 @@
+"""Kernel micro-benchmarks: smm / tiled_matmul / grouped_gemm vs their
+jnp oracles (CPU wall time; interpret-mode Pallas is a correctness
+vehicle on CPU, so the oracle is also the perf reference here — real
+kernel perf is a TPU measurement, see EXPERIMENTS.md §Roofline)."""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=1")
+
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import BlockLayout
+from repro.core.stacks import build_stacks
+from repro.core.densify import to_blocks
+from repro.kernels.smm.ref import smm_process_stack_ref
+from repro.kernels.tiled_matmul.ref import tiled_matmul_ref
+from repro.kernels.grouped_gemm.ref import grouped_gemm_ref
+
+
+def time_call(fn, *args, reps=5):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def main(out="artifacts/bench"):
+    rng = np.random.RandomState(0)
+    results = []
+
+    # smm: stack throughput for paper block sizes
+    for block in (22, 64):
+        m = k = n = 704
+        a = jnp.asarray(rng.randn(m, k).astype(np.float32))
+        b = jnp.asarray(rng.randn(k, n).astype(np.float32))
+        ab = to_blocks(a, block, block)
+        bb = to_blocks(b, block, block)
+        plans = build_stacks(BlockLayout(m, k, block, block),
+                             BlockLayout(k, n, block, block))
+        triples = jnp.asarray(np.concatenate([p.triples for p in plans]))
+        nbr = nbc = m // block
+        c0 = jnp.zeros((nbr * nbc, block, block), jnp.float32)
+        f = jax.jit(smm_process_stack_ref)
+        dt = time_call(f, ab, bb, c0, triples)
+        flops = 2 * m * k * n
+        results.append({"kernel": "smm_ref", "block": block,
+                        "time_s": dt, "gflops": flops / dt / 1e9,
+                        "stack_entries": int(triples.shape[0])})
+        print(f"smm  block={block:3d}: {dt*1e3:8.2f} ms  "
+              f"{flops/dt/1e9:7.2f} GF/s  ({triples.shape[0]} entries)")
+
+    # tiled matmul vs XLA dot
+    m = k = n = 1024
+    a = jnp.asarray(rng.randn(m, k).astype(np.float32))
+    b = jnp.asarray(rng.randn(k, n).astype(np.float32))
+    dt = time_call(jax.jit(tiled_matmul_ref), a, b)
+    results.append({"kernel": "dense_dot", "time_s": dt,
+                    "gflops": 2 * m * k * n / dt / 1e9})
+    print(f"dense 1024^3 dot: {dt*1e3:8.2f} ms  "
+          f"{2*m*k*n/dt/1e9:7.2f} GF/s")
+
+    # grouped gemm (densified MoE)
+    e, c, d, f_ = 16, 256, 512, 1024
+    t = jnp.asarray(rng.randn(e, c, d).astype(np.float32))
+    w = jnp.asarray(rng.randn(e, d, f_).astype(np.float32))
+    dt = time_call(jax.jit(grouped_gemm_ref), t, w)
+    results.append({"kernel": "grouped_gemm_ref", "time_s": dt,
+                    "gflops": 2 * e * c * d * f_ / dt / 1e9})
+    print(f"grouped ({e}x{c}x{d}x{f_}): {dt*1e3:8.2f} ms  "
+          f"{2*e*c*d*f_/dt/1e9:7.2f} GF/s")
+
+    os.makedirs(out, exist_ok=True)
+    with open(os.path.join(out, "kernels.json"), "w") as f:
+        json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Roofline summary table: aggregates artifacts/dryrun/*.json (produced
+by repro.launch.dryrun) into the EXPERIMENTS.md §Roofline table.  No
+jax import — purely a report over the compiled-artifact analysis."""
+import glob
+import json
+import os
+
+HEADERS = ("arch", "shape", "mesh", "C_ms", "M_ms", "X_ms", "dominant",
+           "useful_ratio", "peak_GiB")
+
+
+def load(art_dir="artifacts/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        r = json.load(open(path))
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r.get("mesh", "?"), "skipped": r.get("why")})
+            continue
+        t = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "C_ms": t["compute_s"] * 1e3, "M_ms": t["memory_s"] * 1e3,
+            "X_ms": t["collective_s"] * 1e3, "dominant": t["dominant"],
+            "useful_ratio": r["useful_flop_ratio"],
+            "peak_GiB": r["memory"]["peak_per_device_bytes"] / 2**30,
+        })
+    return rows
+
+
+def main():
+    rows = load()
+    if not rows:
+        print("no dry-run artifacts found; run repro.launch.dryrun first")
+        return
+    print(f"{'arch':26s} {'shape':12s} {'mesh':11s} {'C(ms)':>8s} {'M(ms)':>8s}"
+          f" {'X(ms)':>8s} {'dom':>10s} {'useful':>7s} {'GiB/dev':>8s}")
+    for r in rows:
+        if "skipped" in r:
+            print(f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:11s} "
+                  f"-- skipped: {r['skipped'][:60]}")
+            continue
+        print(f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:11s} "
+              f"{r['C_ms']:8.2f} {r['M_ms']:8.2f} {r['X_ms']:8.2f} "
+              f"{r['dominant']:>10s} {r['useful_ratio']:7.3f} "
+              f"{r['peak_GiB']:8.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Paper table IV-C (Fig. 4): densified DBCSR vs PDGEMM (ScaLAPACK).
+
+Our PDGEMM stand-in is the SUMMA baseline (core/summa.py) — the same
+algorithm family as Cray LibSci_acc's PGEMM.  Reported as the paper
+does: T_pdgemm / T_dbcsr across device counts, for square and
+tall-and-skinny multiplications.  DBCSR dispatches Cannon (square) and
+the O(1)-communication algorithm (tall-skinny), which is exactly where
+the paper's 2.5x win comes from.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=16")
+
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.blocking import GridSpec
+from repro.core.cannon import cannon_matmul
+from repro.core.summa import summa_matmul
+from repro.core.tall_skinny import tall_skinny_matmul
+from repro.launch.mesh import make_mesh
+
+
+def time_call(fn, *args, reps=5):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def main(out="artifacts/bench"):
+    rng = np.random.RandomState(0)
+    results = []
+
+    for side in (2, 4):  # 4 and 16 devices
+        mesh = make_mesh((side, side), ("data", "model"))
+        grid = GridSpec("data", "model")
+        sh = NamedSharding(mesh, P("data", "model"))
+
+        # --- square ---------------------------------------------------
+        n = 1408
+        A = rng.randn(n, n).astype(np.float32)
+        B = rng.randn(n, n).astype(np.float32)
+        Ad, Bd = jax.device_put(A, sh), jax.device_put(B, sh)
+        t_dbcsr = time_call(jax.jit(
+            lambda a, b: cannon_matmul(a, b, mesh=mesh, grid=grid)), Ad, Bd)
+        t_pgemm = time_call(jax.jit(
+            lambda a, b: summa_matmul(a, b, mesh=mesh, grid=grid)), Ad, Bd)
+        results.append({"case": "square", "devices": side * side,
+                        "t_dbcsr_s": t_dbcsr, "t_pgemm_s": t_pgemm,
+                        "speedup": t_pgemm / t_dbcsr})
+        print(f"square      {side*side:3d} dev: PDGEMM/DBCSR = "
+              f"{t_pgemm/t_dbcsr:5.2f}x  ({t_pgemm*1e3:.1f}ms / {t_dbcsr*1e3:.1f}ms)")
+
+        # --- tall-and-skinny (paper: 1408 x 1'982'464) ------------------
+        m = nn = 352
+        k = 45056
+        A2 = rng.randn(m, k).astype(np.float32)
+        B2 = rng.randn(k, nn).astype(np.float32)
+        # DBCSR: K sharded over all devices, one reduce
+        A2d = jax.device_put(A2, NamedSharding(mesh, P(None, ("data", "model"))))
+        B2d = jax.device_put(B2, NamedSharding(mesh, P(("data", "model"), None)))
+        t_dbcsr = time_call(jax.jit(lambda a, b: tall_skinny_matmul(
+            a, b, mesh=mesh, grid=grid, reduce="reduce_scatter")), A2d, B2d)
+        # PGEMM: 2D block layout + SUMMA panels
+        A2s = jax.device_put(A2, sh)
+        B2s = jax.device_put(B2, sh)
+        t_pgemm = time_call(jax.jit(
+            lambda a, b: summa_matmul(a, b, mesh=mesh, grid=grid)), A2s, B2s)
+        results.append({"case": "tall_skinny", "devices": side * side,
+                        "t_dbcsr_s": t_dbcsr, "t_pgemm_s": t_pgemm,
+                        "speedup": t_pgemm / t_dbcsr})
+        print(f"tall-skinny {side*side:3d} dev: PDGEMM/DBCSR = "
+              f"{t_pgemm/t_dbcsr:5.2f}x  ({t_pgemm*1e3:.1f}ms / {t_dbcsr*1e3:.1f}ms)")
+
+    print("\npaper reference: 10-20% win on square, up to 2.5x on "
+          "rectangular (Fig. 4)")
+    os.makedirs(out, exist_ok=True)
+    with open(os.path.join(out, "vs_pgemm.json"), "w") as f:
+        json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark driver: runs each paper-table benchmark in its own
+subprocess (each sets its own XLA_FLAGS device count; this parent never
+imports jax) and aggregates artifacts/bench/*.json.
+
+    PYTHONPATH=src python -m benchmarks.run [--only <substr>]
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+BENCHES = [
+    ("kernels (smm / dense / grouped)", "benchmarks.bench_kernels"),
+    ("IV-A grid configuration", "benchmarks.bench_grid_config"),
+    ("IV-B blocked vs densified", "benchmarks.bench_densify"),
+    ("IV-C DBCSR vs PDGEMM(SUMMA)", "benchmarks.bench_vs_pgemm"),
+    ("2.5D Cannon (pod-axis, beyond-paper)", "benchmarks.bench_25d"),
+    ("roofline summary (from dry-run artifacts)", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO, "src"), REPO, env.get("PYTHONPATH", "")])
+    failures = []
+    for name, mod in BENCHES:
+        if args.only and args.only not in mod:
+            continue
+        print(f"\n=== {name} ===", flush=True)
+        proc = subprocess.run([sys.executable, "-m", mod],
+                              env=env, cwd=REPO)
+        if proc.returncode != 0:
+            failures.append(name)
+    print("\n=== benchmark artifacts ===")
+    bdir = os.path.join(REPO, "artifacts", "bench")
+    if os.path.isdir(bdir):
+        for f in sorted(os.listdir(bdir)):
+            print(" ", os.path.join("artifacts/bench", f))
+    if failures:
+        print("FAILED:", failures)
+        raise SystemExit(1)
+    print("all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""The paper's two benchmark workloads, end to end on a host-device mesh:
+
+  * square multiplication  -> Cannon's algorithm (O(1/sqrt(P)) comm)
+  * tall-and-skinny        -> the O(1)-communication algorithm
+
+with the SUMMA (ScaLAPACK PDGEMM analogue) baseline timed next to each,
+and the blocked vs densified local-multiply comparison.
+
+    PYTHONPATH=src python examples/distributed_matmul.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=16")
+
+import time
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.blocking import GridSpec
+from repro.core.multiply import distributed_matmul
+from repro.core.tall_skinny import classify_shape
+from repro.launch.mesh import make_mesh
+
+
+def timed(tag, fn, *args):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(3):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    dt = (time.perf_counter() - t0) / 3
+    print(f"  {tag:34s} {dt*1e3:9.2f} ms")
+    return out, dt
+
+
+def main():
+    mesh = make_mesh((4, 4), ("data", "model"))
+    grid = GridSpec("data", "model")
+    sh = NamedSharding(mesh, P("data", "model"))
+    rng = np.random.RandomState(0)
+
+    print("== square multiplication (paper: 63'360^3; scaled) ==")
+    n = 1408
+    A = rng.randn(n, n).astype(np.float32)
+    B = rng.randn(n, n).astype(np.float32)
+    Ad, Bd = jax.device_put(A, sh), jax.device_put(B, sh)
+    print(f"  dispatch: {classify_shape(n, n, n)}")
+    c1, t_cannon = timed("cannon + densified", jax.jit(
+        lambda a, b: distributed_matmul(a, b, mesh=mesh, grid=grid,
+                                        algorithm="cannon")), Ad, Bd)
+    c2, t_summa = timed("SUMMA (PDGEMM baseline)", jax.jit(
+        lambda a, b: distributed_matmul(a, b, mesh=mesh, grid=grid,
+                                        algorithm="summa")), Ad, Bd)
+    print(f"  speedup vs PDGEMM: {t_summa/t_cannon:.2f}x   "
+          f"agreement: {float(np.max(np.abs(np.asarray(c1)-np.asarray(c2)))):.1e}")
+
+    print("== tall-and-skinny (paper: 1'408 x 1'982'464; scaled) ==")
+    m = nn = 352
+    k = 45056
+    A2 = rng.randn(m, k).astype(np.float32)
+    B2 = rng.randn(k, nn).astype(np.float32)
+    print(f"  dispatch: {classify_shape(m, k, nn)}")
+    A2d = jax.device_put(A2, NamedSharding(mesh, P(None, ("data", "model"))))
+    B2d = jax.device_put(B2, NamedSharding(mesh, P(("data", "model"), None)))
+    c3, t_ts = timed("tall-skinny (O(1) comm)", jax.jit(
+        lambda a, b: distributed_matmul(a, b, mesh=mesh, grid=grid,
+                                        algorithm="ts_k",
+                                        reduce="reduce_scatter")), A2d, B2d)
+    A2s, B2s = jax.device_put(A2, sh), jax.device_put(B2, sh)
+    c4, t_sm = timed("SUMMA (PDGEMM baseline)", jax.jit(
+        lambda a, b: distributed_matmul(a, b, mesh=mesh, grid=grid,
+                                        algorithm="summa")), A2s, B2s)
+    print(f"  speedup vs PDGEMM: {t_sm/t_ts:.2f}x  "
+          "(paper reports up to 2.5x on this shape)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: DBCSR-style distributed matmul in 30 lines.
+
+Creates two matrices block-cyclic distributed over a 4x4 device grid,
+multiplies them with Cannon's algorithm (densified local GEMMs), and
+checks the result — the whole paper pipeline at toy scale.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=16")
+
+import numpy as np
+import jax
+
+from repro.core import dbcsr
+from repro.core.blocking import GridSpec
+from repro.launch.mesh import make_mesh
+
+
+def main():
+    mesh = make_mesh((4, 4), ("data", "model"))
+    grid = GridSpec(row_axis="data", col_axis="model")
+    rng = np.random.RandomState(0)
+
+    n = 1024
+    A = rng.randn(n, n).astype(np.float32)
+    B = rng.randn(n, n).astype(np.float32)
+
+    # create: the library owns the distribution (block-cyclic a la
+    # ScaLAPACK; block size 64 like the paper's large-block case)
+    Am = dbcsr.create(A, mesh=mesh, grid=grid, block_size=64)
+    Bm = dbcsr.create(B, mesh=mesh, grid=grid, block_size=64)
+
+    # multiply: 'auto' dispatches Cannon (square shapes) with densified
+    # local multiplication — the paper's optimized configuration
+    Cm = dbcsr.multiply(Am, Bm, mesh=mesh, algorithm="auto")
+
+    err = float(np.max(np.abs(np.asarray(Cm.data) - A @ B)))
+    print(f"C = A @ B on a {mesh.devices.shape} mesh: max err {err:.2e}")
+    print(f"occupancy: {Cm.occupancy:.0%}, blocks: "
+          f"{Cm.layout.nblock_rows}x{Cm.layout.nblock_cols} "
+          f"of {Cm.layout.block_rows}x{Cm.layout.block_cols}")
+    assert err < 1e-3
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

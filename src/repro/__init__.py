@@ -1,0 +1,14 @@
+"""repro — DBCSR distributed matmul, reproduced as a TPU/JAX framework.
+
+Public API:
+    repro.core        the paper's engine (Cannon / tall-skinny / 2.5D /
+                      densification / SUMMA baseline / DBCSRMatrix)
+    repro.kernels     Pallas TPU kernels (smm, tiled_matmul, grouped_gemm)
+    repro.models      the 10-architecture LM zoo
+    repro.train       optimizer / train step / checkpointing / elasticity
+    repro.serve       prefill + decode engine
+    repro.launch      meshes, multi-pod dry-run, roofline analysis
+    repro.configs     architecture configs (get_config / ARCHS / SHAPES)
+"""
+
+__version__ = "1.0.0"

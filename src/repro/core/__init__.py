@@ -1,0 +1,20 @@
+"""The paper's primary contribution: distributed blocked matmul.
+
+    from repro.core import dbcsr
+    from repro.core.multiply import distributed_matmul
+"""
+from .blocking import BlockLayout, GridSpec
+from .multiply import distributed_matmul
+from .cannon import cannon_matmul
+from .cannon25d import cannon25d_matmul
+from .tall_skinny import tall_skinny_matmul, classify_shape
+from .summa import summa_matmul
+from .densify import densify, undensify, to_blocks, from_blocks
+from .stacks import build_stacks, StackPlan, STACK_SIZE
+
+__all__ = [
+    "BlockLayout", "GridSpec", "distributed_matmul", "cannon_matmul",
+    "cannon25d_matmul", "tall_skinny_matmul", "classify_shape",
+    "summa_matmul", "densify", "undensify", "to_blocks", "from_blocks",
+    "build_stacks", "StackPlan", "STACK_SIZE",
+]

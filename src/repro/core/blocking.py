@@ -1,0 +1,145 @@
+"""Block layout descriptors for DBCSR-style blocked matrices.
+
+DBCSR stores matrices as a grid of small dense blocks, block-cyclic
+distributed over a 2D process grid.  On TPU we keep the same *logical*
+layout but the per-device payload is a contiguous array; the block
+structure is static metadata used by the stack scheduler (stacks.py)
+and the densification pass (densify.py).
+
+Everything in this module is host-side / static: plain ints and numpy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import numpy as np
+
+__all__ = [
+    "BlockLayout",
+    "GridSpec",
+    "ceil_div",
+    "pad_to_multiple",
+]
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return ceil_div(n, m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockLayout:
+    """Uniform-block layout of a (rows x cols) matrix.
+
+    The paper uses square blocks of size 22 / 64 (and 4 in one test);
+    we support any uniform (block_rows x block_cols).
+    """
+
+    rows: int
+    cols: int
+    block_rows: int
+    block_cols: int
+
+    def __post_init__(self):
+        if self.rows % self.block_rows:
+            raise ValueError(
+                f"rows={self.rows} not divisible by block_rows={self.block_rows}"
+            )
+        if self.cols % self.block_cols:
+            raise ValueError(
+                f"cols={self.cols} not divisible by block_cols={self.block_cols}"
+            )
+
+    @property
+    def nblock_rows(self) -> int:
+        return self.rows // self.block_rows
+
+    @property
+    def nblock_cols(self) -> int:
+        return self.cols // self.block_cols
+
+    @property
+    def nblocks(self) -> int:
+        return self.nblock_rows * self.nblock_cols
+
+    def block_shape(self) -> Tuple[int, int]:
+        return (self.block_rows, self.block_cols)
+
+    def local(self, grid_rows: int, grid_cols: int) -> "BlockLayout":
+        """Layout of one device's shard under an even 2D split."""
+        if self.nblock_rows % grid_rows or self.nblock_cols % grid_cols:
+            raise ValueError(
+                f"block grid {self.nblock_rows}x{self.nblock_cols} not divisible "
+                f"by process grid {grid_rows}x{grid_cols}"
+            )
+        return BlockLayout(
+            self.rows // grid_rows,
+            self.cols // grid_cols,
+            self.block_rows,
+            self.block_cols,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class GridSpec:
+    """Names the mesh axes used as the DBCSR 2D process grid.
+
+    ``stack_axis`` (optional) is the 2.5D replication axis (the "pod"
+    axis of the production mesh) used by cannon25d.
+    """
+
+    row_axis: str = "data"
+    col_axis: str = "model"
+    stack_axis: str | None = None
+
+    def grid_shape(self, mesh) -> Tuple[int, int]:
+        return mesh.shape[self.row_axis], mesh.shape[self.col_axis]
+
+    def stack_size(self, mesh) -> int:
+        if self.stack_axis is None:
+            return 1
+        return mesh.shape[self.stack_axis]
+
+    def validate_square(self, mesh) -> int:
+        pr, pc = self.grid_shape(mesh)
+        if pr != pc:
+            raise ValueError(
+                f"Cannon requires a square process grid, got {pr}x{pc}. "
+                "Use summa/tall_skinny for non-square grids."
+            )
+        return pr
+
+
+def block_cyclic_owner(
+    block_row: int, block_col: int, grid_rows: int, grid_cols: int
+) -> Tuple[int, int]:
+    """ScaLAPACK-style block-cyclic owner of a block (paper section IV:
+    matrices are 'block-cycling distributed a la Scalapack')."""
+    return block_row % grid_rows, block_col % grid_cols
+
+
+def morton_order(n_rows: int, n_cols: int) -> np.ndarray:
+    """Cache-oblivious (Z-Morton) traversal order over a block grid.
+
+    DBCSR uses a cache-oblivious matrix traversal to fix the order in
+    which blocks are multiplied (Traversal phase, Fig. 1).  Returns an
+    (n_rows*n_cols, 2) int32 array of (row, col) pairs in Z-order.
+    """
+    side = 1 << max(n_rows - 1, n_cols - 1, 1).bit_length()
+    coords = []
+    for z in range(side * side):
+        # de-interleave bits of z into (row, col)
+        r = c = 0
+        for bit in range(side.bit_length()):
+            c |= ((z >> (2 * bit)) & 1) << bit
+            r |= ((z >> (2 * bit + 1)) & 1) << bit
+        if r < n_rows and c < n_cols:
+            coords.append((r, c))
+    out = np.asarray(coords, dtype=np.int32)
+    assert out.shape == (n_rows * n_cols, 2)
+    return out

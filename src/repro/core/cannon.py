@@ -1,0 +1,173 @@
+"""Cannon's algorithm on a square mesh grid via shard_map + ppermute.
+
+This is DBCSR's data-exchange algorithm for general matrix shapes
+(paper section II): per-process communicated data scales O(1/sqrt(P)).
+
+TPU adaptation notes (see DESIGN.md §2):
+  * MPI async point-to-point sends -> ``jax.lax.ppermute`` neighbour
+    shifts.  The TPU ICI is a torus, so Cannon's row/col shifts map to
+    contention-free single-hop collective-permutes.
+  * The initial Cannon skew (device (i,j) must start from A(i, (i+j)%P)
+    and B((i+j)%P, j)) is one joint-axis ppermute over the flattened
+    (row, col) axes.
+  * Communication/computation overlap (paper: MPI/CUDA-stream double
+    buffering) is expressed by issuing the ppermute for step t+1
+    *before* the local dot of step t; XLA schedules the
+    collective-permute-start/done pair around the dot.
+
+The local multiply is pluggable (``local_matmul``): ``densified`` uses a
+single large dot (paper section III — the cuBLAS path), ``blocked``
+dispatches the stack-of-small-blocks path (kernels/smm, LIBCUSMM
+analogue).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .blocking import GridSpec
+
+__all__ = ["cannon_matmul", "cannon_local_steps"]
+
+
+def _skew_perm(pg: int, which: str):
+    """Joint-axis permutation realising the Cannon pre-skew.
+
+    A: device (i, j) receives A block (i, (i+j) % P)  [row i shifted left i]
+    B: device (i, j) receives B block ((i+j) % P, j)  [col j shifted up  j]
+    Expressed as (source, destination) pairs over the row-major flattened
+    (row, col) index space.
+    """
+    pairs = []
+    for i in range(pg):
+        for j in range(pg):
+            if which == "a":  # (i, j) sends to (i, (j - i) % P)
+                pairs.append((i * pg + j, i * pg + ((j - i) % pg)))
+            else:  # b: (i, j) sends to ((i - j) % P, j)
+                pairs.append((i * pg + j, ((i - j) % pg) * pg + j))
+    return pairs
+
+
+def _shift_perm(pg: int):
+    """Single-axis circular shift by one (left/up)."""
+    return [(k, (k - 1) % pg) for k in range(pg)]
+
+
+def cannon_local_steps(
+    a_blk: jax.Array,
+    b_blk: jax.Array,
+    *,
+    pg: int,
+    row_axis: str,
+    col_axis: str,
+    local_matmul: Callable[[jax.Array, jax.Array], jax.Array],
+    out_dtype,
+    skew: bool = True,
+    double_buffer: bool = True,
+    steps: Optional[int] = None,
+    step_offset: int = 0,
+):
+    """Body of Cannon's algorithm (runs inside shard_map).
+
+    ``steps``/``step_offset`` support the 2.5D variant (cannon25d.py)
+    where each replica executes a strided/offset subset of the shifts.
+    """
+    if skew:
+        a_blk = jax.lax.ppermute(a_blk, (row_axis, col_axis), _skew_perm(pg, "a"))
+        b_blk = jax.lax.ppermute(b_blk, (row_axis, col_axis), _skew_perm(pg, "b"))
+    if step_offset:
+        # jump the k-phase forward by step_offset (2.5D replica offset)
+        shift_a = [(j, (j - step_offset) % pg) for j in range(pg)]
+        shift_b = [(i, (i - step_offset) % pg) for i in range(pg)]
+        a_blk = jax.lax.ppermute(a_blk, col_axis, shift_a)
+        b_blk = jax.lax.ppermute(b_blk, row_axis, shift_b)
+
+    n_steps = pg if steps is None else steps
+    c_blk = jnp.zeros((a_blk.shape[0], b_blk.shape[1]), dtype=out_dtype)
+    shift_a = _shift_perm(pg)
+    shift_b = _shift_perm(pg)
+
+    if double_buffer:
+        # Unrolled: issue step t+1's permutes before step t's dot so XLA
+        # overlaps collective-permute with the local matmul.
+        for t in range(n_steps):
+            if t < n_steps - 1:
+                a_nxt = jax.lax.ppermute(a_blk, col_axis, shift_a)
+                b_nxt = jax.lax.ppermute(b_blk, row_axis, shift_b)
+            c_blk = c_blk + local_matmul(a_blk, b_blk).astype(out_dtype)
+            if t < n_steps - 1:
+                a_blk, b_blk = a_nxt, b_nxt
+    else:
+        # Rolled (fori_loop): smaller HLO, no overlap. Kept for ablation
+        # (EXPERIMENTS.md §Perf measures the overlap win from the HLO).
+        def body(_, carry):
+            a_c, b_c, c_c = carry
+            c_c = c_c + local_matmul(a_c, b_c).astype(out_dtype)
+            a_c = jax.lax.ppermute(a_c, col_axis, shift_a)
+            b_c = jax.lax.ppermute(b_c, row_axis, shift_b)
+            return a_c, b_c, c_c
+
+        # the zero-init accumulator must enter the loop already marked
+        # varying over the grid axes (its per-step updates are)
+        c_blk = jax.lax.pvary(c_blk, (row_axis, col_axis))
+        _, _, c_blk = jax.lax.fori_loop(0, n_steps, body, (a_blk, b_blk, c_blk))
+    return c_blk
+
+
+def _default_local_matmul(precision):
+    def f(a, b):
+        return jax.lax.dot(a, b, precision=precision,
+                           preferred_element_type=jnp.float32)
+
+    return f
+
+
+def cannon_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    mesh: jax.sharding.Mesh,
+    grid: GridSpec = GridSpec(),
+    local_matmul: Optional[Callable] = None,
+    out_dtype=None,
+    precision=jax.lax.Precision.DEFAULT,
+    double_buffer: bool = True,
+    skew: bool = True,
+) -> jax.Array:
+    """C = A @ B with Cannon's algorithm on a square (row, col) grid.
+
+    A: (M, K) sharded P(row_axis, col_axis)
+    B: (K, N) sharded P(row_axis, col_axis)
+    C: (M, N) sharded P(row_axis, col_axis)
+
+    Per-device communication volume: (M*K + K*N) / P * sqrt(P) total
+    over sqrt(P) steps == O(1/sqrt(P)) of the matrix size, the paper's
+    scaling for general shapes.
+    """
+    pg = grid.validate_square(mesh)
+    if out_dtype is None:
+        out_dtype = jnp.promote_types(a.dtype, b.dtype)
+    lm = local_matmul or _default_local_matmul(precision)
+
+    def body(a_blk, b_blk):
+        c = cannon_local_steps(
+            a_blk,
+            b_blk,
+            pg=pg,
+            row_axis=grid.row_axis,
+            col_axis=grid.col_axis,
+            local_matmul=lm,
+            out_dtype=jnp.float32,
+            skew=skew,
+            double_buffer=double_buffer,
+        )
+        return c.astype(out_dtype)
+
+    spec = P(grid.row_axis, grid.col_axis)
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                       out_specs=spec, check_vma=False)
+    return fn(a, b)

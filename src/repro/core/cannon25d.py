@@ -1,0 +1,124 @@
+"""2.5D Cannon over the pod axis (beyond-paper, from the DBCSR lineage).
+
+Lazzaro et al. [paper ref 10] extended DBCSR with a 2.5D algorithm:
+keep c replicas of A and B on c stacked process grids, let replica p
+execute only 1/c of the k-shift steps (offset by p * P/c), and combine
+the partial C's with one reduction over the stack axis.  Per-replica
+communication drops from O(sqrt(P)) shifts to O(sqrt(P)/c) at the cost
+of c-fold operand replication — the classic communication-avoiding
+trade.
+
+On the production mesh the replication axis is the **pod** axis
+(2 pods => c = 2): inter-pod ICI/DCN carries only the final C
+reduction, while all Cannon shifts stay on the intra-pod torus.  This
+is exactly the property you want at 1000+ node scale: the slow
+cross-pod links see O(M*N/P) bytes once, never the O(sqrt(P)) shift
+traffic.
+
+SPMD note: the per-replica step offset must NOT be implemented with
+control flow on the replica index — collectives inside divergent
+branches deadlock (all devices must issue the same collective
+sequence).  Instead the offset is folded into the initial skew as one
+*static* joint-axis ppermute over (stack, row, col): device (p, i, j)
+starts from A(i, (i + j + p*P/c) % P) and B((i + j + p*P/c) % P, j).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .blocking import GridSpec
+from .cannon import cannon_local_steps, _default_local_matmul
+
+__all__ = ["cannon25d_matmul"]
+
+
+def _skew25d_perm(pg: int, c_repl: int, spr: int, which: str):
+    """Static permutation over flattened (stack, row, col):
+    destination (p, i, j) receives
+      A block (i, (i + j + p*spr) % P)  — held by source (p, i, (i+j+p*spr)%P)
+      B block ((i + j + p*spr) % P, j)  — held by source (p, (i+j+p*spr)%P, j)
+    (sources stay within their own pod: A/B enter replicated over pods).
+    """
+    flat = lambda p, i, j: (p * pg + i) * pg + j
+    pairs = []
+    for p in range(c_repl):
+        for i in range(pg):
+            for j in range(pg):
+                k = (i + j + p * spr) % pg
+                if which == "a":
+                    pairs.append((flat(p, i, k), flat(p, i, j)))
+                else:
+                    pairs.append((flat(p, k, j), flat(p, i, j)))
+    return pairs
+
+
+def cannon25d_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    mesh: jax.sharding.Mesh,
+    grid: GridSpec,
+    local_matmul: Optional[Callable] = None,
+    out_dtype=None,
+    precision=jax.lax.Precision.DEFAULT,
+    double_buffer: bool = True,
+    reduce: str = "all_reduce",  # or "reduce_scatter"
+) -> jax.Array:
+    """C = A @ B, 2.5D Cannon with replication over ``grid.stack_axis``.
+
+    A, B enter 2D-sharded over (row, col) and replicated over the stack
+    axis — spec P(row, col).  C leaves with the same spec (all_reduce)
+    or additionally row-sharded over the stack axis (reduce_scatter).
+    """
+    if grid.stack_axis is None:
+        raise ValueError("cannon25d needs grid.stack_axis (e.g. 'pod')")
+    pg = grid.validate_square(mesh)
+    c_repl = grid.stack_size(mesh)
+    if pg % c_repl:
+        raise ValueError(f"grid side {pg} not divisible by replication {c_repl}")
+    spr = pg // c_repl  # steps per replica
+    if out_dtype is None:
+        out_dtype = jnp.promote_types(a.dtype, b.dtype)
+    lm = local_matmul or _default_local_matmul(precision)
+    axes3 = (grid.stack_axis, grid.row_axis, grid.col_axis)
+
+    def body(a_blk, b_blk):
+        # fused skew + replica offset: one static joint-axis ppermute
+        a_blk = jax.lax.ppermute(a_blk, axes3, _skew25d_perm(pg, c_repl, spr, "a"))
+        b_blk = jax.lax.ppermute(b_blk, axes3, _skew25d_perm(pg, c_repl, spr, "b"))
+        c_partial = cannon_local_steps(
+            a_blk,
+            b_blk,
+            pg=pg,
+            row_axis=grid.row_axis,
+            col_axis=grid.col_axis,
+            local_matmul=lm,
+            out_dtype=jnp.float32,
+            skew=False,           # already done (with the pod offset)
+            double_buffer=double_buffer,
+            steps=spr,
+        )
+        if reduce == "all_reduce":
+            c_blk = jax.lax.psum(c_partial, grid.stack_axis)
+        elif reduce == "reduce_scatter":
+            c_blk = jax.lax.psum_scatter(
+                c_partial, grid.stack_axis, scatter_dimension=0, tiled=True
+            )
+        else:
+            raise ValueError(reduce)
+        return c_blk.astype(out_dtype)
+
+    spec2d = P(grid.row_axis, grid.col_axis)
+    if reduce == "all_reduce":
+        out_spec = spec2d
+    else:
+        # psum_scatter chunk p of the local block goes to pod p => the
+        # stack axis is the *minor* factor of the row partition.
+        out_spec = P((grid.row_axis, grid.stack_axis), grid.col_axis)
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(spec2d, spec2d),
+                       out_specs=out_spec, check_vma=False)
+    return fn(a, b)

@@ -1,0 +1,149 @@
+"""Densification — the paper's core optimization (section III).
+
+DBCSR stores operands as many small blocks.  For *dense* inputs the
+per-thread blocks are coalesced ("densified") into one large dense
+block, so that:
+  1. the Generation phase has fewer blocks to organise into stacks,
+  2. the Scheduler phase has fewer stacks to handle (stack size -> 1),
+  3. the local multiply becomes a single large GEMM executed by the
+     vendor library (cuBLAS there, the MXU dot / tiled_matmul Pallas
+     kernel here), which is where large-block throughput saturates.
+
+The cost is the densify/undensify copy of the payload (the paper's
+measured overhead).  On TPU the copies are pure layout transforms
+((nbr, nbc, bm, bn) <-> (nbr*bm, nbc*bn) reshuffles) that XLA fuses
+into surrounding ops; the *performance* content of the trade-off
+(many small dots vs one big dot) is identical and is what
+benchmarks/bench_densify.py measures.
+
+This module provides the layout transforms plus the two local-multiply
+strategies consumed by cannon/summa/tall_skinny's ``local_matmul`` hook:
+
+  * ``densified_local_matmul`` — densify, one big dot, undensify.
+  * ``blocked_local_matmul``   — keep blocks, run the stack plans
+    through the smm kernel (LIBCUSMM analogue) or its jnp reference.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blocking import BlockLayout
+from .stacks import StackPlan, build_stacks, STACK_SIZE
+
+__all__ = [
+    "to_blocks",
+    "from_blocks",
+    "densify",
+    "undensify",
+    "blocked_local_matmul",
+    "densified_local_matmul",
+]
+
+
+def to_blocks(x: jax.Array, bm: int, bn: int) -> jax.Array:
+    """(R, C) -> (nbr*nbc, bm, bn) stacked blocks, row-major block order.
+
+    This is the 'blocked' storage: the DBCSR payload of a dense matrix.
+    """
+    r, c = x.shape
+    if r % bm or c % bn:
+        raise ValueError(f"shape {x.shape} not divisible by block ({bm},{bn})")
+    nbr, nbc = r // bm, c // bn
+    return (
+        x.reshape(nbr, bm, nbc, bn).transpose(0, 2, 1, 3).reshape(nbr * nbc, bm, bn)
+    )
+
+
+def from_blocks(blocks: jax.Array, nbr: int, nbc: int) -> jax.Array:
+    """Inverse of to_blocks."""
+    _, bm, bn = blocks.shape
+    return (
+        blocks.reshape(nbr, nbc, bm, bn).transpose(0, 2, 1, 3).reshape(nbr * bm, nbc * bn)
+    )
+
+
+def densify(blocks: jax.Array, nbr: int, nbc: int) -> jax.Array:
+    """Coalesce a blocked payload into one dense block (paper eq. 1/2).
+
+    In DBCSR this is a copy into fresh memory-pool buffers; here it is
+    the layout transform from block-stacked to contiguous row-major.
+    """
+    return from_blocks(blocks, nbr, nbc)
+
+
+def undensify(dense: jax.Array, bm: int, bn: int) -> jax.Array:
+    """Decompose the densified C back into the original block sizes."""
+    return to_blocks(dense, bm, bn)
+
+
+def densified_local_matmul(precision=jax.lax.Precision.DEFAULT,
+                           kernel: Optional[str] = None):
+    """Local multiply for the densified path: one large GEMM.
+
+    kernel=None     -> jax.lax.dot (XLA's MXU path; the 'vendor' GEMM)
+    kernel='pallas' -> kernels/tiled_matmul (explicit VMEM tiling)
+    """
+    if kernel == "pallas":
+        from repro.kernels.tiled_matmul.ops import tiled_matmul
+
+        def f(a, b):
+            return tiled_matmul(a, b)
+
+        return f
+
+    def f(a, b):
+        return jax.lax.dot(a, b, precision=precision,
+                           preferred_element_type=jnp.float32)
+
+    return f
+
+
+def blocked_local_matmul(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    block_m: int,
+    block_k: int,
+    block_n: int,
+    stack_size: int = STACK_SIZE,
+    kernel: str = "smm",
+):
+    """Local multiply for the blocked path.
+
+    Builds the stack plans once (host-side, static) for the local
+    (m, k) x (k, n) multiply and returns a function  (a, b) -> c  that
+    runs every stack through the small-matrix-multiply kernel.
+
+    kernel='smm'  -> Pallas LIBCUSMM-analogue (interpret-mode on CPU)
+    kernel='ref'  -> pure-jnp gather/segment-sum oracle (same math)
+    """
+    a_layout = BlockLayout(m, k, block_m, block_k)
+    b_layout = BlockLayout(k, n, block_k, block_n)
+    plans: List[StackPlan] = build_stacks(a_layout, b_layout, stack_size)
+    nbr, nbk = a_layout.nblock_rows, a_layout.nblock_cols
+    nbc = b_layout.nblock_cols
+
+    if kernel == "smm":
+        from repro.kernels.smm.ops import smm_process_stack as process
+    elif kernel == "ref":
+        from repro.kernels.smm.ref import smm_process_stack_ref as process
+    else:
+        raise ValueError(kernel)
+
+    def f(a: jax.Array, b: jax.Array) -> jax.Array:
+        a_blocks = to_blocks(a, block_m, block_k)
+        b_blocks = to_blocks(b, block_k, block_n)
+        c_blocks = jnp.zeros((nbr * nbc, block_m, block_n), jnp.float32)
+        for plan in plans:
+            triples = jnp.asarray(plan.triples)
+            c_blocks = process(a_blocks, b_blocks, c_blocks, triples)
+        return from_blocks(c_blocks, nbr, nbc)
+
+    f.plans = plans  # expose for benchmarks (stack statistics)
+    return f

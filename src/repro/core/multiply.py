@@ -1,0 +1,98 @@
+"""Top-level distributed multiply dispatcher.
+
+Implements DBCSR's algorithm selection (paper section II): Cannon for
+general shapes, the tall-and-skinny algorithm when one dimension
+dominates, plus the beyond-paper 2.5D variant when a stack (pod) axis
+is available.  The local multiply is either 'densified' (one big GEMM
+— the paper's section III optimization, default for dense matrices) or
+'blocked' (stack-of-small-GEMMs via the smm kernel).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .blocking import GridSpec
+from .cannon import cannon_matmul
+from .cannon25d import cannon25d_matmul
+from .densify import blocked_local_matmul, densified_local_matmul
+from .summa import summa_matmul
+from .tall_skinny import classify_shape, tall_skinny_matmul
+
+__all__ = ["distributed_matmul"]
+
+
+def distributed_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    mesh: jax.sharding.Mesh,
+    grid: GridSpec = GridSpec(),
+    algorithm: str = "auto",
+    densify: bool = True,
+    block_m: int = 64,
+    block_k: int = 64,
+    block_n: int = 64,
+    local_kernel: Optional[str] = None,
+    precision=jax.lax.Precision.DEFAULT,
+    double_buffer: bool = True,
+    **kw,
+) -> jax.Array:
+    """C = A @ B on the mesh. ``algorithm``:
+
+      auto         — DBCSR dispatch: shape-classify into cannon / ts_*
+      cannon       — Cannon's algorithm (square grids)
+      cannon25d    — 2.5D Cannon over grid.stack_axis
+      ts_k|ts_m|ts_n — tall-and-skinny variants
+      summa        — the ScaLAPACK-PDGEMM-style baseline
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner dims disagree: {a.shape} @ {b.shape}")
+
+    if algorithm == "auto":
+        algorithm = classify_shape(m, k, n)
+        if algorithm == "cannon" and grid.stack_axis is not None:
+            algorithm = "cannon25d"
+
+    # ---- local multiply strategy (densified vs blocked) --------------
+    if densify:
+        lm = densified_local_matmul(precision, kernel=local_kernel)
+    else:
+        pr, pc = grid.grid_shape(mesh)
+        if algorithm.startswith("ts_"):
+            p_all = pr * pc * grid.stack_size(mesh)
+            shapes = {
+                "ts_k": (m, k // p_all, n),
+                "ts_m": (m // p_all, k, n),
+                "ts_n": (m, k, n // p_all),
+            }
+            ml, kl, nl = shapes[algorithm]
+        else:
+            ml, kl, nl = m // pr, k // pc, n // pc
+        lm = blocked_local_matmul(
+            ml, kl, nl, block_m=block_m, block_k=block_k, block_n=block_n,
+            kernel=local_kernel or "smm",
+        )
+
+    # ---- data-exchange algorithm --------------------------------------
+    if algorithm == "cannon":
+        return cannon_matmul(
+            a, b, mesh=mesh, grid=grid, local_matmul=lm,
+            precision=precision, double_buffer=double_buffer, **kw)
+    if algorithm == "cannon25d":
+        return cannon25d_matmul(
+            a, b, mesh=mesh, grid=grid, local_matmul=lm,
+            precision=precision, double_buffer=double_buffer, **kw)
+    if algorithm in ("ts_k", "ts_m", "ts_n"):
+        return tall_skinny_matmul(
+            a, b, mesh=mesh, grid=grid, mode=algorithm, local_matmul=lm,
+            precision=precision, **kw)
+    if algorithm == "summa":
+        return summa_matmul(
+            a, b, mesh=mesh, grid=grid, local_matmul=lm,
+            precision=precision, **kw)
+    raise ValueError(f"unknown algorithm {algorithm!r}")

@@ -1,0 +1,108 @@
+"""SUMMA — the ScaLAPACK PDGEMM-style baseline DBCSR is compared against.
+
+The paper's headline result (section IV-C) is densified DBCSR vs the
+PDGEMM of Cray LibSci_acc, a GPU-accelerated ScaLAPACK.  ScaLAPACK's
+PDGEMM is SUMMA-like: for each panel k of the contraction dimension,
+the owning column of the process grid broadcasts its A panel along
+rows, the owning row broadcasts its B panel along columns, and every
+process accumulates a local GEMM.
+
+We implement the panel broadcast two ways:
+
+  * ``bcast='psum'``   — masked all-reduce per panel.  One-shot,
+    latency-light, but moves ~2x the optimal broadcast volume.  This is
+    the *baseline* configuration: its extra volume vs Cannon is what
+    the roofline comparison in benchmarks/bench_vs_pgemm.py surfaces
+    (the in-framework analogue of the paper's Fig. 4).
+  * ``bcast='gather'`` — one all-gather of all panels up front (PUMMA
+    style); volume-optimal broadcast, memory cost sqrt(P)x local
+    operand size.
+
+Unlike Cannon, SUMMA supports non-square process grids.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .blocking import GridSpec
+from .cannon import _default_local_matmul
+
+__all__ = ["summa_matmul"]
+
+
+def summa_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    mesh: jax.sharding.Mesh,
+    grid: GridSpec = GridSpec(),
+    local_matmul: Optional[Callable] = None,
+    out_dtype=None,
+    precision=jax.lax.Precision.DEFAULT,
+    bcast: str = "psum",
+) -> jax.Array:
+    """C = A @ B via SUMMA on the (row_axis, col_axis) grid."""
+    pr, pc = grid.grid_shape(mesh)
+    if out_dtype is None:
+        out_dtype = jnp.promote_types(a.dtype, b.dtype)
+    lm = local_matmul or _default_local_matmul(precision)
+    row_ax, col_ax = grid.row_axis, grid.col_axis
+
+    if bcast == "gather":
+        def body_gather(a_blk, b_blk):
+            # PUMMA-style: materialise the full local row of A and
+            # column of B, then one big local dot.
+            a_row = jax.lax.all_gather(a_blk, col_ax, axis=1, tiled=True)
+            b_col = jax.lax.all_gather(b_blk, row_ax, axis=0, tiled=True)
+            return lm(a_row, b_col).astype(out_dtype)
+
+        spec = P(row_ax, col_ax)
+        fn = jax.shard_map(
+            body_gather, mesh=mesh, in_specs=(spec, spec), out_specs=spec,
+            check_vma=False,
+        )
+        return fn(a, b)
+
+    if bcast != "psum":
+        raise ValueError(bcast)
+
+    # Panel count: one panel per grid column of A (= per grid row of B).
+    # For non-square grids the contraction panels follow the larger of
+    # (pc, pr); we require pc == pr panels only when both own K shards.
+    n_panels = pc  # A is K-split over columns
+    if pr != pc:
+        # general case: iterate over lcm so both owners are well defined
+        import math
+        n_panels = math.lcm(pr, pc)
+
+    def body(a_blk, b_blk):
+        my_col = jax.lax.axis_index(col_ax)
+        my_row = jax.lax.axis_index(row_ax)
+        kl_a = a_blk.shape[1] * pc // n_panels   # A panel width (local)
+        kl_b = b_blk.shape[0] * pr // n_panels   # B panel height (local)
+        c = jnp.zeros((a_blk.shape[0], b_blk.shape[1]), jnp.float32)
+
+        for p in range(n_panels):
+            # owner coordinates of panel p
+            col_owner = p * pc // n_panels
+            row_owner = p * pr // n_panels
+            a_off = (p % (n_panels // pc)) * kl_a if n_panels != pc else 0
+            b_off = (p % (n_panels // pr)) * kl_b if n_panels != pr else 0
+            a_panel = jax.lax.dynamic_slice_in_dim(a_blk, a_off, kl_a, axis=1)
+            b_panel = jax.lax.dynamic_slice_in_dim(b_blk, b_off, kl_b, axis=0)
+            # broadcast-by-masked-allreduce along the perpendicular axis
+            a_panel = jnp.where(my_col == col_owner, a_panel, 0)
+            a_panel = jax.lax.psum(a_panel, col_ax)
+            b_panel = jnp.where(my_row == row_owner, b_panel, 0)
+            b_panel = jax.lax.psum(b_panel, row_ax)
+            c = c + lm(a_panel, b_panel).astype(jnp.float32)
+        return c.astype(out_dtype)
+
+    spec = P(row_ax, col_ax)
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                       out_specs=spec, check_vma=False)
+    return fn(a, b)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes:
+
+    smm/          LIBCUSMM analogue — stack-driven batched small GEMM
+                  (+ autotune.py, the parameter-sweep tuner)
+    tiled_matmul/ cuBLAS analogue — VMEM-tiled dense matmul
+    grouped_gemm/ densified-MoE grouped GEMM
+
+Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper, CPU interpret-mode autoselect), ref.py (pure-jnp oracle).
+"""

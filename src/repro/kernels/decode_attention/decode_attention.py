@@ -1,0 +1,104 @@
+"""Pallas split-KV decode attention (FlashDecoding on TPU).
+
+The single-token decode read of a long KV cache is the serving
+roofline's dominant memory stream (see EXPERIMENTS.md §Roofline: every
+decode cell is memory-bound on exactly this).  The kernel streams the
+cache through VMEM in blocks along the sequence axis with an
+online-softmax accumulator held in VMEM scratch — one HBM pass over
+K/V at Hkv width (GQA stays grouped: queries enter as (Hkv, R) so the
+cache is never expanded to H heads).
+
+Grid: (B, Hkv, S/block_k) — the kv axis is innermost, so the output
+block (b, h) is revisited across consecutive steps and the scratch
+accumulator stays resident (the same revisit contract as tiled_matmul).
+``cur_len`` arrives via scalar prefetch and masks the tail block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+__all__ = ["decode_attention_pallas"]
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, block_k: int, n_kv: int, scale: float):
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (R, Dh)
+    k = k_ref[0, :, 0].astype(jnp.float32)       # (block_k, Dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)       # (block_k, Dh)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (R, bk)
+    kv_pos = kv_i * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_k), 1)
+    s = jnp.where(kv_pos < len_ref[0], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kv_i == n_kv - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention_pallas(
+    q: jax.Array,        # (B, Hkv, R, Dh)
+    k_cache: jax.Array,  # (B, S, Hkv, Dh)
+    v_cache: jax.Array,  # (B, S, Hkv, Dh)
+    cur_len: jax.Array,  # () int32 — number of valid cache entries
+    *,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hkv, r, dh = q.shape
+    s = k_cache.shape[1]
+    block_k = min(block_k, s)
+    assert s % block_k == 0, (s, block_k)
+    n_kv = s // block_k
+    scale = dh ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, r, dh), lambda bi, hi, ki, L: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, dh),
+                         lambda bi, hi, ki, L: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, dh),
+                         lambda bi, hi, ki, L: (bi, ki, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, r, dh),
+                               lambda bi, hi, ki, L: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((r, 1), jnp.float32),    # running max
+            pltpu.VMEM((r, 1), jnp.float32),    # running denominator
+            pltpu.VMEM((r, dh), jnp.float32),   # accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, block_k=block_k, n_kv=n_kv, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, r, dh), jnp.float32),
+        interpret=interpret,
+    )(cur_len.reshape(1), q, k_cache, v_cache)

@@ -1,0 +1,33 @@
+"""Public wrapper: (B, 1, H, Dh) query layout <-> grouped kernel layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention_pallas
+
+__all__ = ["decode_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(
+    q: jax.Array,        # (B, 1, H, Dh) — the model-layer layout
+    k_cache: jax.Array,  # (B, S, Hkv, Dh)
+    v_cache: jax.Array,
+    cur_len: jax.Array,  # () int32
+    *,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, one, h, dh = q.shape
+    hkv = k_cache.shape[2]
+    r = h // hkv
+    qg = q.reshape(b, hkv, r, dh)
+    out = decode_attention_pallas(
+        qg, k_cache, v_cache, jnp.asarray(cur_len, jnp.int32),
+        block_k=block_k, interpret=interpret)
+    return out.reshape(b, one, h, dh).astype(q.dtype)

@@ -1,0 +1,22 @@
+"""Oracle for the decode-attention kernel (grouped GQA form)."""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, cur_len):
+    """q (B, Hkv, R, Dh); caches (B, S, Hkv, Dh); cur_len () int32.
+
+    Returns (B, Hkv, R, Dh) — attention of each grouped query head over
+    the first cur_len cache entries.
+    """
+    s = jnp.einsum("bhrd,bkhd->bhrk", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32))
+    scale = q.shape[-1] ** -0.5
+    s = s * scale
+    valid = jnp.arange(k_cache.shape[1]) < cur_len
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhrk,bkhd->bhrd", p, v_cache.astype(jnp.float32))
+    return out

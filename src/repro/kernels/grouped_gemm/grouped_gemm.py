@@ -1,0 +1,74 @@
+"""Pallas grouped GEMM — the densified MoE expert multiply.
+
+MoE expert computation is a block-sparse matrix multiply: the
+(token x expert) dispatch pattern selects which (token-block, expert)
+pairs exist.  *Densification* in the DBCSR sense is the grouped-GEMM
+trick: gather each expert's tokens into a contiguous capacity buffer
+(E, C, d) so the expert dimension becomes a batch of dense GEMMs — one
+large multiply per expert instead of many small per-token-block ones.
+
+The kernel is a batched VMEM-tiled matmul with the expert index as the
+outermost grid dimension; each expert's weight tile streams through
+VMEM while the float32 accumulator persists across the contraction
+steps (same revisit pattern as tiled_matmul).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["grouped_gemm_pallas"]
+
+
+def _gg_kernel(t_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        t_ref[0], w_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bc", "bf", "bk", "out_dtype", "interpret")
+)
+def grouped_gemm_pallas(
+    tokens: jax.Array,    # (E, C, d)
+    weights: jax.Array,   # (E, d, f)
+    *,
+    bc: int = 128,
+    bf: int = 256,
+    bk: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    e, c, d = tokens.shape
+    e2, d2, f = weights.shape
+    assert e == e2 and d == d2
+    bc, bf, bk = min(bc, c), min(bf, f), min(bk, d)
+    if c % bc or f % bf or d % bk:
+        raise ValueError(f"({e},{c},{d},{f}) not divisible by ({bc},{bk},{bf})")
+    k_steps = d // bk
+    return pl.pallas_call(
+        functools.partial(_gg_kernel, k_steps=k_steps),
+        grid=(e, c // bc, f // bf, k_steps),
+        in_specs=[
+            pl.BlockSpec((1, bc, bk), lambda ei, i, j, kk: (ei, i, kk)),
+            pl.BlockSpec((1, bk, bf), lambda ei, i, j, kk: (ei, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda ei, i, j, kk: (ei, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, c, f), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(tokens, weights)

@@ -1,0 +1,35 @@
+"""Public wrapper for the grouped GEMM kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .grouped_gemm import grouped_gemm_pallas
+
+__all__ = ["grouped_gemm"]
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bf", "bk", "interpret"))
+def grouped_gemm(
+    tokens: jax.Array,   # (E, C, d)
+    weights: jax.Array,  # (E, d, f)
+    *,
+    bc: int = 128,
+    bf: int = 256,
+    bk: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    e, c, d = tokens.shape
+    _, _, f = weights.shape
+    bc_, bf_, bk_ = min(bc, c), min(bf, f), min(bk, d)
+    pad = lambda x, t: (-x) % t
+    pc, pk, pf = pad(c, bc_), pad(d, bk_), pad(f, bf_)
+    t_p = jnp.pad(tokens, ((0, 0), (0, pc), (0, pk))) if (pc or pk) else tokens
+    w_p = jnp.pad(weights, ((0, 0), (0, pk), (0, pf))) if (pk or pf) else weights
+    out = grouped_gemm_pallas(t_p, w_p, bc=bc_, bf=bf_, bk=bk_,
+                              interpret=interpret)
+    return out[:, :c, :f] if (pc or pf) else out

@@ -1,0 +1,13 @@
+"""Oracle for the grouped (per-expert) GEMM kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def grouped_gemm_ref(tokens: jax.Array, weights: jax.Array) -> jax.Array:
+    """tokens (E, C, d) @ weights (E, d, f) -> (E, C, f), f32 accum."""
+    return jnp.einsum(
+        "ecd,edf->ecf",
+        tokens.astype(jnp.float32),
+        weights.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )

@@ -1,0 +1,133 @@
+"""smm kernel parameter sweep — the LIBCUSMM autotuner's TPU analogue.
+
+LIBCUSMM explores ~30k-150k CUDA parameter combinations per (m, n, k)
+with an ML performance model (paper section II).  The TPU parameter
+space is BlockSpec-level and small enough to sweep directly:
+
+  * MXU alignment on/off (pad blocks to (8, 128) multiples),
+  * stack tile (how many stack entries per kernel launch chunk),
+
+measured per (m, n, k) block size and cached to a JSON winners table.
+On this CPU container the sweep times interpret-mode execution (a
+correctness vehicle, so the *absolute* numbers are not TPU truth —
+the harness and cache format are what transfer; on real hardware the
+same sweep runs the compiled kernel).
+
+    PYTHONPATH=src python -m repro.kernels.smm.autotune --blocks 22 64
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocking import BlockLayout
+from repro.core.stacks import build_stacks
+from repro.core.densify import to_blocks
+from .ops import smm_process_stack
+from .ref import smm_process_stack_ref
+
+DEFAULT_CACHE = os.path.join("artifacts", "smm_autotune.json")
+
+# the sweep space: (align, stack_tile)
+SPACE: List[Tuple[bool, int]] = [
+    (False, 1024), (False, 4096), (False, 30000),
+    (True, 1024), (True, 4096), (True, 30000),
+]
+
+
+def _bench(fn, *args, reps: int = 3) -> float:
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def tune_block(block: int, *, n_blocks: int = 8,
+               use_kernel: bool = False) -> Dict:
+    """Sweep SPACE for a (block x block x block) stack workload."""
+    m = k = n = block * n_blocks
+    rng = np.random.RandomState(0)
+    a = jnp.asarray(rng.randn(m, k).astype(np.float32))
+    b = jnp.asarray(rng.randn(k, n).astype(np.float32))
+    a_blocks = to_blocks(a, block, block)
+    b_blocks = to_blocks(b, block, block)
+
+    rows = []
+    for align, stack_tile in SPACE:
+        plans = build_stacks(BlockLayout(m, k, block, block),
+                             BlockLayout(k, n, block, block),
+                             stack_size=stack_tile)
+        c = jnp.zeros((n_blocks * n_blocks, block, block), jnp.float32)
+
+        if use_kernel:  # interpret-mode Pallas (slow on CPU, true on TPU)
+            def run(c0=c, plans=plans, align=align):
+                out = c0
+                for p in plans:
+                    out = smm_process_stack(a_blocks, b_blocks, out,
+                                            jnp.asarray(p.triples),
+                                            align=align)
+                return out
+        else:           # jnp oracle path (CPU-meaningful proxy)
+            def run(c0=c, plans=plans):
+                out = c0
+                for p in plans:
+                    out = smm_process_stack_ref(a_blocks, b_blocks, out,
+                                                jnp.asarray(p.triples))
+                return out
+
+        dt = _bench(jax.jit(run))
+        flops = 2 * m * k * n
+        rows.append({"align": align, "stack_tile": stack_tile,
+                     "time_s": dt, "gflops": flops / dt / 1e9,
+                     "n_stacks": len(plans)})
+    best = min(rows, key=lambda r: r["time_s"])
+    return {"block": block, "rows": rows, "best": best}
+
+
+def load_cache(path: str = DEFAULT_CACHE) -> Dict:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def best_params(block: int, path: str = DEFAULT_CACHE) -> Tuple[bool, int]:
+    """Winner lookup used by callers; falls back to a sane default."""
+    cache = load_cache(path)
+    entry = cache.get(str(block))
+    if entry:
+        return entry["best"]["align"], entry["best"]["stack_tile"]
+    return (block % 8 != 0 or block % 128 != 0), 30000
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--blocks", type=int, nargs="+", default=[22, 64])
+    ap.add_argument("--cache", default=DEFAULT_CACHE)
+    ap.add_argument("--kernel", action="store_true",
+                    help="sweep the interpret-mode Pallas kernel itself")
+    args = ap.parse_args()
+
+    cache = load_cache(args.cache)
+    for block in args.blocks:
+        result = tune_block(block, use_kernel=args.kernel)
+        cache[str(block)] = result
+        b = result["best"]
+        print(f"block {block:3d}: best align={b['align']} "
+              f"stack_tile={b['stack_tile']} ({b['gflops']:.2f} GF/s)")
+    os.makedirs(os.path.dirname(args.cache) or ".", exist_ok=True)
+    with open(args.cache, "w") as f:
+        json.dump(cache, f, indent=1)
+    print("cached ->", args.cache)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""jit'd public wrapper for the smm kernel.
+
+Handles MXU alignment: DBCSR block sizes (4 / 22 / 64 in the paper) are
+mostly hostile to the TPU systolic array, which wants the trailing two
+dims in multiples of (8, 128) for f32.  ``smm_process_stack`` pads the
+block arrays once per stack batch (amortised over the whole stack) and
+strips the padding from C — the TPU equivalent of LIBCUSMM generating a
+kernel per (m, n, k) with internal padding registers.
+
+On CPU (this container) the kernel runs in interpret mode; on TPU the
+same code lowers natively.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .smm import smm_pallas_call
+
+__all__ = ["smm_process_stack", "mxu_pad_shape"]
+
+_SUBLANE = 8
+_LANE = 128
+
+
+def mxu_pad_shape(bm: int, bk: int, bn: int, align: bool):
+    if not align:
+        return bm, bk, bn
+    pad = lambda x, m: -(-x // m) * m
+    return pad(bm, _SUBLANE), pad(bk, _LANE), pad(bn, _LANE)
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("align", "interpret"))
+def smm_process_stack(
+    a_blocks: jax.Array,
+    b_blocks: jax.Array,
+    c_blocks: jax.Array,
+    triples: jax.Array,
+    *,
+    align: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """C[c] += A[a] @ B[b] over a stack; returns updated C blocks."""
+    if interpret is None:
+        interpret = _on_cpu()
+    _, bm, bk = a_blocks.shape
+    _, _, bn = b_blocks.shape
+    pm, pk, pn = mxu_pad_shape(bm, bk, bn, align)
+    if (pm, pk, pn) != (bm, bk, bn):
+        a_blocks = jnp.pad(a_blocks, ((0, 0), (0, pm - bm), (0, pk - bk)))
+        b_blocks = jnp.pad(b_blocks, ((0, 0), (0, pk - bk), (0, pn - bn)))
+        c_blocks_p = jnp.pad(c_blocks, ((0, 0), (0, pm - bm), (0, pn - bn)))
+    else:
+        c_blocks_p = c_blocks
+    out = smm_pallas_call(a_blocks, b_blocks, c_blocks_p, triples,
+                          interpret=interpret)
+    if (pm, pn) != (bm, bn):
+        out = out[:, :bm, :bn]
+    return out

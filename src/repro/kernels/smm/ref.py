@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the smm (small-matrix-multiply stack) kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["smm_process_stack_ref"]
+
+
+def smm_process_stack_ref(
+    a_blocks: jax.Array,  # (Na, bm, bk)
+    b_blocks: jax.Array,  # (Nb, bk, bn)
+    c_blocks: jax.Array,  # (Nc, bm, bn) float32 accumulator
+    triples: jax.Array,   # (S, 3) int32: (a_idx, b_idx, c_idx)
+) -> jax.Array:
+    """C[c] += A[a] @ B[b] for every stack entry — gather / batched
+    matmul / scatter-add formulation."""
+    a = a_blocks[triples[:, 0]]
+    b = b_blocks[triples[:, 1]]
+    prod = jnp.einsum(
+        "smk,skn->smn", a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return c_blocks.at[triples[:, 2]].add(prod)

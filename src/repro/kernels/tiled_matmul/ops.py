@@ -1,0 +1,38 @@
+"""Public wrapper for the tiled matmul kernel: pads to tile multiples,
+auto-selects interpret mode on CPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .tiled_matmul import tiled_matmul_pallas
+
+__all__ = ["tiled_matmul"]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret"))
+def tiled_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, k = a.shape
+    _, n = b.shape
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    pad = lambda x, t: (-x) % t
+    pm, pk, pn = pad(m, bm_), pad(k, bk_), pad(n, bn_)
+    a_p = jnp.pad(a, ((0, pm), (0, pk))) if (pm or pk) else a
+    b_p = jnp.pad(b, ((0, pk), (0, pn))) if (pk or pn) else b
+    out = tiled_matmul_pallas(
+        a_p, b_p, bm=bm_, bn=bn_, bk=bk_, interpret=interpret
+    )
+    return out[:m, :n] if (pm or pn) else out

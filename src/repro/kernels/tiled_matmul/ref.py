@@ -1,0 +1,10 @@
+"""Oracle for the tiled dense matmul kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def tiled_matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jax.lax.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )

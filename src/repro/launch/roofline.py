@@ -1,0 +1,103 @@
+"""Roofline terms from dry-run artifacts (TPU v5e constants in mesh.HW).
+
+  compute term    = HLO_dot_FLOPs_per_device / peak_FLOP/s
+  memory term     = HBM_bytes_per_device    / HBM_bw
+  collective term = collective_bytes_per_device / ICI_link_bw
+
+(the HLO analyzer works on the SPMD-partitioned module, so its numbers
+are already per-device; chips therefore do NOT divide again here).
+
+MODEL_FLOPS uses the standard 6*N*D (train) / 2*N*D (inference) with
+N = active parameter count — the useful-flops numerator that exposes
+remat/redundancy waste when compared against compiled HLO FLOPs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+__all__ = ["roofline_terms", "model_flops", "param_count"]
+
+
+def roofline_terms(costs, hw: Dict) -> Dict:
+    compute_s = costs.flops / hw["peak_flops_bf16"]
+    memory_s = costs.hbm_bytes / hw["hbm_bw"]
+    collective_s = costs.total_collective_bytes / hw["ici_bw"]
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(compute_s, memory_s, collective_s)
+    terms["dominant"] = {"compute_s": "compute", "memory_s": "memory",
+                         "collective_s": "collective"}[dominant]
+    # fraction of the bound step time that is useful MXU work
+    terms["roofline_fraction"] = compute_s / bound if bound > 0 else 0.0
+    return terms
+
+
+def param_count(cfg: ModelConfig, *, active_only: bool = False) -> int:
+    """Analytic parameter count (embedding + per-layer, by layer kind)."""
+    d, v = cfg.d_model, cfg.vocab_size
+    dh = cfg.resolved_head_dim
+    h, hkv = cfg.num_heads, cfg.num_kv_heads
+
+    def attn_params():
+        return d * dh * (h + 2 * hkv) + h * dh * d
+
+    def mla_params():
+        qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+        dn, dr, dv_ = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        return (d * qr + qr * h * (dn + dr) + d * (kvr + dr)
+                + kvr * h * dn + kvr * h * dv_ + h * dv_ * d)
+
+    def mamba_params():
+        d_in = cfg.mamba_expand * d
+        dt_rank = max(1, d // 16)
+        n = cfg.mamba_d_state
+        return (d * 2 * d_in + cfg.mamba_conv * d_in
+                + d_in * (dt_rank + 2 * n) + dt_rank * d_in
+                + d_in * n + 2 * d_in + d_in * d)
+
+    def rwkv_params():
+        hs = cfg.rwkv_head_size
+        nh = d // hs
+        tm = (5 * d + d * 5 * 32 + 5 * 32 * d + d + d * 64 + 64 * d
+              + nh * hs + 4 * d * d + 2 * d + d * d)
+        cm = 2 * d + d * cfg.d_ff + d * d + cfg.d_ff * d
+        return tm + cm
+
+    def dense_ffn(f):
+        return d * f * (3 if cfg.glu else 2)
+
+    def moe_ffn(active):
+        e = (cfg.top_k if active else cfg.n_experts)
+        p = e * 3 * d * cfg.moe_d_ff + d * cfg.n_experts
+        p += cfg.n_shared_experts * 3 * d * cfg.moe_d_ff
+        return p
+
+    total = v * d + (0 if cfg.tie_embeddings else d * v)
+    for l in range(cfg.num_layers):
+        mix, ff = cfg.layer_kind(l)
+        total += {"attention": attn_params, "mla": mla_params,
+                  "mamba": mamba_params, "rwkv6": rwkv_params}[mix]()
+        if ff == "dense":
+            total += dense_ffn(cfg.d_ff)
+        elif ff == "moe":
+            total += moe_ffn(active_only)
+        total += 2 * d  # norms
+    return int(total)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Global MODEL_FLOPS for one step of this cell: 6*N_active*D for
+    training, 2*N_active*D for inference (D = tokens processed)."""
+    n_active = param_count(cfg, active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * 1   # decode: one token per sequence
+    return 2.0 * n_active * tokens

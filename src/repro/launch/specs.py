@@ -1,0 +1,160 @@
+"""Input specs (ShapeDtypeStruct stand-ins) and step functions for every
+(architecture x shape) dry-run cell — weak-type-correct, shardable, no
+device allocation."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, get_config
+from repro.models import transformer as T
+from repro.serve import engine
+from repro.train.optimizer import OptConfig, make_optimizer
+from repro.train import train_step as TS
+
+__all__ = ["cell_is_supported", "build_cell", "input_specs"]
+
+
+def cell_is_supported(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("pure full-attention architecture: 500k-token KV is "
+                       "quadratic-memory-infeasible; skipped per DESIGN.md §4")
+    return True, ""
+
+
+def opt_for(cfg: ModelConfig) -> OptConfig:
+    # fp32 Adam state for >100B-param models does not fit v5e HBM —
+    # use factored Adafactor there (DESIGN.md §6).
+    big = cfg.name.startswith("deepseek")
+    return OptConfig(name="adafactor" if big else "adamw", zero=not big)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs of the step-function *data* arguments."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        if cfg.input_mode == "embeddings":
+            inputs = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                          getattr(jnp, cfg.dtype))
+        else:
+            inputs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if shape.kind == "train":
+            return {"inputs": inputs,
+                    "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        return {"inputs": inputs}
+    # decode: one new token with a KV cache of seq_len
+    state, tokens = engine.serve_input_specs(cfg, batch=b, kv_len=s)
+    return {"state": state, "tokens": tokens}
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    """Split the per-device batch so checkpointed layer inputs stay
+    under ~4 GiB: n_layers x (B_loc/micro) x S x d x 2B <= 4 GiB."""
+    n_dp = 1
+    for a in ("pod", "data"):
+        n_dp *= mesh.shape.get(a, 1)
+    b_loc = max(shape.global_batch // n_dp, 1)
+    ckpt_bytes = cfg.num_layers * b_loc * shape.seq_len * cfg.d_model * 2
+    if cfg.sequence_parallel:
+        ckpt_bytes //= mesh.shape.get("model", 1)
+    micro = 1
+    budget = 4 * 2**30
+    while ckpt_bytes / micro > budget and micro < b_loc:
+        micro *= 2
+    if cfg.moe:
+        # the dispatch/combine tensors materialise (T_loc * top_k, d)
+        # per MoE layer — bound them to ~2 GiB per microbatch
+        disp = b_loc * shape.seq_len * cfg.top_k * cfg.d_model * 2
+        while disp / micro > 2 * 2**30 and micro < b_loc:
+            micro *= 2
+    return micro
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               n_microbatches: int = 0, cfg=None):
+    """Returns (step_fn, args_specs, in_shardings, out_shardings, meta)
+    ready for jit(...).lower(*args_specs)."""
+    if cfg is None:
+        cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_supported(cfg, shape)
+    if not ok:
+        raise ValueError(f"{arch} x {shape_name} unsupported: {why}")
+    ns = lambda spec: NamedSharding(mesh, spec)
+
+    if shape.kind == "train":
+        if n_microbatches == 0:
+            n_microbatches = default_microbatches(cfg, shape, mesh)
+        opt = make_optimizer(opt_for(cfg))
+        p_sh, o_sh, b_sh = TS.shardings_for(cfg, mesh, opt)
+        grad_sh = o_sh.get("m") if opt.cfg.name == "adamw" else None
+        step = TS.make_train_step(cfg, mesh, opt,
+                                  n_microbatches=n_microbatches,
+                                  grad_shardings=grad_sh)
+        params = T.model_param_shapes(cfg)
+        pspecs = T.model_param_specs(cfg)
+        pshapes = T.model_param_shapes(cfg)
+        ospecs = opt.state_specs(pspecs, pshapes, mesh=mesh)
+        opt_state = _opt_state_shapes(opt, params)
+        batch = input_specs(cfg, shape)
+        args = (params, opt_state, batch)
+        in_sh = (p_sh, o_sh, b_sh)
+        out_sh = (p_sh, o_sh, None)
+        donate = (0, 1)
+        meta = {"kind": "train", "cfg": cfg, "shape": shape,
+                "n_microbatches": n_microbatches}
+        return step, args, in_sh, out_sh, donate, meta
+
+    if shape.kind == "prefill":
+        from repro.serve.prefill import prefill_step
+
+        def step(params, inputs):
+            return prefill_step(params, inputs, cfg, mesh)
+
+        pspecs = T.model_param_specs(cfg, mesh)
+        p_sh = jax.tree_util.tree_map(ns, pspecs,
+                                      is_leaf=lambda x: isinstance(x, P))
+        params = T.model_param_shapes(cfg)
+        batch = input_specs(cfg, shape)
+        dp = T.dp_axes(mesh)
+        in_spec = (P(dp, None, None) if cfg.input_mode == "embeddings"
+                   else P(dp, None))
+        args = (params, batch["inputs"])
+        in_sh = (p_sh, ns(in_spec))
+        out_sh = None
+        meta = {"kind": "prefill", "cfg": cfg, "shape": shape}
+        return step, args, in_sh, out_sh, (), meta
+
+    # decode
+    def step(params, state, tokens):
+        return engine.decode_step(params, state, tokens, cfg, mesh)
+
+    pspecs = T.model_param_specs(cfg, mesh)
+    p_sh = jax.tree_util.tree_map(ns, pspecs,
+                                  is_leaf=lambda x: isinstance(x, P))
+    params = T.model_param_shapes(cfg)
+    sp = input_specs(cfg, shape)
+    state_sh, tok_sh = engine.decode_shardings(cfg, mesh, batch=shape.global_batch,
+                                               kv_len=shape.seq_len)
+    args = (params, sp["state"], sp["tokens"])
+    in_sh = (p_sh, state_sh, tok_sh)
+    # next_tokens is always (B, 1) int32 (even for embedding-stub archs)
+    dp_out = T.dp_axes(mesh)
+    n_dp = 1
+    for a in dp_out:
+        n_dp *= mesh.shape[a]
+    if shape.global_batch % max(n_dp, 1) != 0:
+        dp_out = ()
+    out_sh = (ns(P(dp_out, None)), state_sh)
+    donate = (1,)
+    meta = {"kind": "decode", "cfg": cfg, "shape": shape}
+    return step, args, in_sh, out_sh, donate, meta
+
+
+def _opt_state_shapes(opt, param_shapes_tree):
+    """eval_shape the optimizer init over ShapeDtypeStructs."""
+    return jax.eval_shape(opt.init, param_shapes_tree)

@@ -1,0 +1,246 @@
+"""Attention mixers: GQA/MHA/MQA with RoPE, QK-norm, bias options;
+memory-efficient blockwise causal attention for long sequences; KV-cache
+prefill and decode paths.
+
+Sharding convention: Q heads and KV heads are sharded over the 'model'
+mesh axis (KV heads replicated when num_kv_heads < model-axis size);
+activations are data-sharded over ('pod', 'data').
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import ParamDef, apply_rope, norm_defs, apply_norm
+
+NEG_INF = -1e30
+
+
+def pick_blocks(sq: int, skv: int, block_q: int, block_kv: int):
+    """Adaptive blocking: ~16 q-blocks keeps the unrolled q loop small
+    while bounding the per-block score tile."""
+    bq = min(block_q, max(512, sq // 16))
+    while sq % bq:
+        bq //= 2
+    bkv = min(block_kv, max(512, bq))
+    while skv % bkv:
+        bkv //= 2
+    return max(bq, 1), max(bkv, 1)
+
+
+# ---------------------------------------------------------------------------
+# parameter declarations
+# ---------------------------------------------------------------------------
+
+
+def effective_heads(cfg):
+    """(q, kv) head counts after TP padding.
+
+    head_pad_factor=c scales BOTH counts by the integer c, appending
+    zero-masked heads: the real-head -> kv-group mapping j*hkv/h is
+    invariant under a common factor, so the padded model computes
+    exactly the original attention (pad-head outputs are hard-masked in
+    attention_apply, so no gradient ever flows into them).  Purpose:
+    h=12/24 cannot shard over a 16-way model axis — c in {2, 4} makes
+    them shardable instead of fully replicated (EXPERIMENTS.md §Perf).
+    """
+    c = max(1, cfg.head_pad_factor)
+    return cfg.num_heads * c, cfg.num_kv_heads * c
+
+
+def attention_defs(cfg) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    dh = cfg.head_dim or d // cfg.num_heads
+    h, hkv = effective_heads(cfg)
+    defs = {
+        "wq": ParamDef((d, h, dh), P(None, "model", None)),
+        "wk": ParamDef((d, hkv, dh), P(None, "model", None)),
+        "wv": ParamDef((d, hkv, dh), P(None, "model", None)),
+        "wo": ParamDef((h, dh, d), P("model", None, None)),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((h, dh), P("model", None), "zeros")
+        defs["bk"] = ParamDef((hkv, dh), P("model", None), "zeros")
+        defs["bv"] = ParamDef((hkv, dh), P("model", None), "zeros")
+    if cfg.qk_norm:
+        defs["q_norm"] = {"scale": ParamDef((dh,), P(None), "ones")}
+        defs["k_norm"] = {"scale": ParamDef((dh,), P(None), "ones")}
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, Hkv, Dh) -> (B, S, Hkv*n_rep, Dh)"""
+    if n_rep == 1:
+        return k
+    b, s, hkv, dh = k.shape
+    return jnp.broadcast_to(
+        k[:, :, :, None, :], (b, s, hkv, n_rep, dh)
+    ).reshape(b, s, hkv * n_rep, dh)
+
+
+def full_causal_attention(q, k, v, *, scale: float) -> jax.Array:
+    """Naive O(S^2)-memory attention — reference / short sequences.
+
+    q (B, Sq, H, Dh); k, v (B, Skv, H, Dh); causal with Sq == Skv.
+    """
+    b, sq, h, dh = q.shape
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = jnp.tril(jnp.ones((sq, k.shape[1]), bool))
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def blockwise_causal_attention(
+    q, k, v, *, scale: float, block_q: int = 512, block_kv: int = 512
+) -> jax.Array:
+    """Flash-style online-softmax attention in pure JAX.
+
+    Memory is O(S * block) instead of O(S^2); the causal structure is
+    exploited with a traced-upper-bound fori_loop so no flops are spent
+    on fully-masked KV blocks (the usual 2x waste of mask-only impls).
+    """
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    block_q, block_kv = pick_blocks(sq, skv, block_q, block_kv)
+    nq, nkv = sq // block_q, skv // block_kv
+    q_pos0 = skv - sq  # alignment offset (prefill continuation)
+
+    q_blocks = q.reshape(b, nq, block_q, h, dh)
+
+    def one_q_block(qi: int, q_blk):
+        # positions of this q block (qi is a python int: the q loop is
+        # unrolled so every kv fori_loop below has a *static* trip
+        # count — flop-optimal causality and statically-analyzable HLO
+        # for the roofline pass, vs. the masked-full-scan variant that
+        # wastes ~2x flops)
+        q_pos = q_pos0 + qi * block_q + jnp.arange(block_q)
+
+        def kv_step(ki, carry):
+            acc, m, l = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * block_kv, block_kv, 1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ki * block_kv, block_kv, 1)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            kv_pos = ki * block_kv + jnp.arange(block_kv)
+            causal = q_pos[:, None] >= kv_pos[None, :]
+            s = jnp.where(causal[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(v.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return acc, m_new, l
+
+        acc0 = jnp.zeros((b, h, block_q, dh), jnp.float32)
+        m0 = jnp.full((b, h, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, block_q), jnp.float32)
+        # only kv blocks that intersect the causal triangle (static)
+        hi = min((q_pos0 + (qi + 1) * block_q + block_kv - 1) // block_kv, nkv)
+        acc, m, l = jax.lax.fori_loop(0, hi, kv_step, (acc0, m0, l0))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # cast to the compute dtype per block: concatenating f32 blocks
+        # would materialise a 2x-sized tensor before the cast
+        return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+    outs = [one_q_block(qi, q_blocks[:, qi]) for qi in range(nq)]
+    return jnp.concatenate(outs, axis=1) if nq > 1 else outs[0]
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, scale: float):
+    """Single-token decode: q (B, 1, H, Dh); caches (B, Smax, Hkv, Dh);
+    cur_len (int32 scalar) — number of valid cache entries.
+
+    GQA is computed in grouped form (q reshaped to (Hkv, n_rep)) so the
+    KV cache is never materialised at H heads — for MQA/GQA decode the
+    cache read is the roofline-dominant memory stream and must stay at
+    Hkv width.
+    """
+    b, one, h, dh = q.shape
+    hkv = k_cache.shape[2]
+    n_rep = h // hkv
+    qg = q.reshape(b, one, hkv, n_rep, dh)
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(k_cache.shape[1]) < cur_len
+    s = jnp.where(valid[None, None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", p, v_cache)
+    return out.reshape(b, one, h, dh)
+
+
+# ---------------------------------------------------------------------------
+# the attention block (projections + mixer + cache plumbing)
+# ---------------------------------------------------------------------------
+
+
+def attention_apply(
+    params: Dict,
+    x: jax.Array,                    # (B, S, d)
+    positions: jax.Array,            # (B, S)
+    cfg,
+    *,
+    cache: Optional[Tuple] = None,   # (k_cache, v_cache, cur_len) for decode
+    block_q: int = 512,
+    block_kv: int = 512,
+    long_seq_threshold: int = 8192,
+):
+    """Returns (out (B, S, d), new_cache)."""
+    d = cfg.d_model
+    dh = cfg.head_dim or d // cfg.num_heads
+    h, hkv = effective_heads(cfg)
+    scale = dh ** -0.5
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        from .common import rms_norm
+        q = rms_norm(q, params["q_norm"]["scale"])
+        k = rms_norm(k, params["k_norm"]["scale"])
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    n_rep = h // hkv
+    if cache is None:
+        k_full = _repeat_kv(k, n_rep)
+        v_full = _repeat_kv(v, n_rep)
+        if x.shape[1] > long_seq_threshold:
+            out = blockwise_causal_attention(
+                q, k_full, v_full, scale=scale,
+                block_q=block_q, block_kv=block_kv)
+        else:
+            out = full_causal_attention(q, k_full, v_full, scale=scale)
+        new_cache = (k, v)  # pre-repeat KV (what a prefill would store)
+    else:
+        k_cache, v_cache, cur_len = cache
+        # write the new token at cur_len
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, cur_len, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, cur_len, 1)
+        out = decode_attention(q, k_cache, v_cache, cur_len + 1, scale=scale)
+        new_cache = (k_cache, v_cache)
+
+    if cfg.head_pad_factor > 1:
+        # hard-mask padded heads: keeps the padded model *exactly* the
+        # original (and blocks gradient flow into pad parameters)
+        head_mask = (jnp.arange(h) < cfg.num_heads).astype(out.dtype)
+        out = out * head_mask[None, None, :, None]
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return out, new_cache

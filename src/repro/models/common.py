@@ -1,0 +1,216 @@
+"""Shared model substrate: declarative params, norms, RoPE, activations.
+
+Params are declared once (shape + init + PartitionSpec) through
+``ParamDef``; both the initializer and the sharding-spec pytree derive
+from the same declaration so they can never drift.  Mesh axis
+conventions (see launch/mesh.py):
+
+  batch / sequence  -> ("pod", "data")   (data parallel)
+  heads / ff hidden / experts / vocab -> "model"  (TP / EP)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# declarative parameters
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    spec: P
+    init: str = "normal"      # normal | zeros | ones | scaled
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+
+def init_params(defs, key, dtype_override=None):
+    """Materialise a pytree of ParamDef into arrays (smoke tests / examples)."""
+    flat, treedef = jax.tree_util.tree_flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(flat))
+    out = []
+    for d, k in zip(flat, keys):
+        dt = dtype_override or d.dtype
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        else:
+            fan_in = d.shape[0] if len(d.shape) > 1 else max(d.shape[-1], 1)
+            std = d.scale / math.sqrt(fan_in)
+            out.append((jax.random.normal(k, d.shape, jnp.float32) * std).astype(dt))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_shapes(defs, dtype_override=None):
+    """ShapeDtypeStruct pytree (for eval_shape / the dry-run)."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype_override or d.dtype),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def param_specs(defs):
+    """PartitionSpec pytree with the same structure."""
+    return jax.tree_util.tree_map(
+        lambda d: d.spec, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def resolve_spec(spec: P, shape: Tuple[int, ...], mesh) -> P:
+    """Drop mesh axes from dims they don't evenly divide.
+
+    E.g. KV-head dims of 2/4/12/24 cannot shard over a 16-way 'model'
+    axis — those tensors fall back to replication on that dim (noted in
+    DESIGN.md §5; the TP win there moves to the FFN/vocab matmuls).
+    """
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, part in zip(shape, parts):
+        if part is None:
+            out.append(None)
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        axes = tuple(a for a in axes if a in mesh.shape)  # drop absent axes
+        if not axes:
+            out.append(None)
+            continue
+        extent = 1
+        for a in axes:
+            extent *= mesh.shape[a]
+        if dim % extent != 0:
+            out.append(None)
+        else:
+            out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+def resolve_specs(spec_tree, shape_tree, mesh):
+    """resolve_spec over a (specs, shapes) pytree pair."""
+    return jax.tree_util.tree_map(
+        lambda sp, sh: resolve_spec(sp, sh.shape, mesh),
+        spec_tree, shape_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def stack_defs(defs, n: int):
+    """Prepend a scan (layer) dimension of size n to every ParamDef."""
+    def f(d: ParamDef) -> ParamDef:
+        spec = P(*((None,) + tuple(d.spec)))
+        return dataclasses.replace(d, shape=(n,) + tuple(d.shape), spec=spec)
+    return jax.tree_util.tree_map(
+        f, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def apply_norm(x, params, kind: str):
+    if kind == "rmsnorm":
+        return rms_norm(x, params["scale"])
+    return layer_norm(x, params["scale"], params["bias"])
+
+
+def norm_defs(d: int, kind: str) -> Dict[str, ParamDef]:
+    if kind == "rmsnorm":
+        return {"scale": ParamDef((d,), P(None), "ones")}
+    return {"scale": ParamDef((d,), P(None), "ones"),
+            "bias": ParamDef((d,), P(None), "zeros")}
+
+
+def act_fn(name: str):
+    return {
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "silu": jax.nn.silu,
+        "relu": jax.nn.relu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, Dh) ; positions: (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                       # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jax.Array, d: int) -> jax.Array:
+    """MusicGen-style sinusoidal position embeddings, computed pointwise
+    from position ids (works for both prefill ranges and decode steps).
+
+    positions (..., S) int32 -> (..., S, d) float32.
+    """
+    pos = positions.astype(jnp.float32)[..., None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    angle = pos / jnp.power(10000.0, dim / d)          # (..., S, d/2)
+    pe = jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# sharded embedding / lm head / loss (the tall-skinny corner of the paper)
+# ---------------------------------------------------------------------------
+
+
+def embed_lookup(tokens, embedding):
+    """tokens (B, S) int32; embedding (V, d) sharded P('model', None).
+
+    The gather is a one-hot x embedding matmul in disguise: with the
+    vocabulary sharded over 'model', each device gathers only its own
+    rows (out-of-range -> 0) and the partials are summed — GSPMD emits
+    exactly this from the take + sharding constraint.
+    """
+    return jnp.take(embedding, tokens, axis=0)
+
+
+def cross_entropy_logits_sharded(logits, labels, *, valid_mask=None):
+    """logits (B, S, V) — V may be sharded over 'model'; numerically
+    stable CE computed in f32.  Returns mean nll over valid tokens."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    label_logit = jnp.take_along_axis(
+        logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - label_logit
+    if valid_mask is None:
+        return jnp.mean(nll)
+    valid = valid_mask.astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)

@@ -1,0 +1,52 @@
+"""Dense feed-forward blocks (GLU and plain), tensor-parallel over 'model'.
+
+Column-parallel up/gate, row-parallel down; the combining psum is left
+to GSPMD (emitted from the sharding constraints on the weights).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import ParamDef, act_fn
+
+__all__ = ["ffn_defs", "ffn_apply"]
+
+
+def ffn_defs(cfg, d_ff: int | None = None) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.glu:
+        defs = {
+            "w_gate": ParamDef((d, f), P(None, "model")),
+            "w_up": ParamDef((d, f), P(None, "model")),
+            "w_down": ParamDef((f, d), P("model", None)),
+        }
+    else:
+        defs = {
+            "w_up": ParamDef((d, f), P(None, "model")),
+            "w_down": ParamDef((f, d), P("model", None)),
+        }
+    if cfg.mlp_bias:
+        defs["b_up"] = ParamDef((f,), P("model"), "zeros")
+        defs["b_down"] = ParamDef((d,), P(None), "zeros")
+    return defs
+
+
+def ffn_apply(params: Dict, x: jax.Array, cfg) -> jax.Array:
+    act = act_fn(cfg.act)
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(x.dtype))
+    if cfg.mlp_bias:
+        u = u + params["b_up"].astype(x.dtype)
+    if cfg.glu:
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype))
+        h = act(g) * u
+    else:
+        h = act(u)
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(x.dtype))
+    if cfg.mlp_bias:
+        out = out + params["b_down"].astype(x.dtype)
+    return out

@@ -1,0 +1,153 @@
+"""Mamba (selective SSM) mixer — for the Jamba hybrid architecture.
+
+Training/prefill uses a chunked parallel scan: the sequence is cut into
+chunks processed by an associative scan (log-depth, TPU-friendly) with
+a sequential lax.scan carrying the inter-chunk state, bounding the
+materialised (B, chunk, d_inner, N) decay tensors.  The inner dimension
+is sharded over the 'model' axis, so the big intermediates are TP-sharded
+too (GSPMD propagates from the weight specs).
+
+Decode is the O(1) recurrent step with (conv_state, ssm_state) carried
+in the serve cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import ParamDef, rms_norm
+
+__all__ = ["mamba_defs", "mamba_apply"]
+
+
+def _dims(cfg):
+    d_in = cfg.mamba_expand * cfg.d_model
+    dt_rank = max(1, cfg.d_model // 16)
+    return d_in, dt_rank, cfg.mamba_d_state, cfg.mamba_conv
+
+
+def mamba_defs(cfg) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    d_in, dt_rank, n, k = _dims(cfg)
+    return {
+        "in_proj": ParamDef((d, 2 * d_in), P(None, "model")),
+        "conv_w": ParamDef((k, d_in), P(None, "model")),
+        "conv_b": ParamDef((d_in,), P("model"), "zeros"),
+        "x_proj": ParamDef((d_in, dt_rank + 2 * n), P("model", None)),
+        "dt_proj": ParamDef((dt_rank, d_in), P(None, "model")),
+        "dt_bias": ParamDef((d_in,), P("model"), "zeros"),
+        "a_log": ParamDef((d_in, n), P("model", None), "ones"),
+        "d_skip": ParamDef((d_in,), P("model"), "ones"),
+        "out_proj": ParamDef((d_in, d), P("model", None)),
+    }
+
+
+def _ssm_chunked(u, dt, a, b, c, *, chunk: int):
+    """h_t = exp(dt_t A) h_{t-1} + dt_t B_t u_t ;  y_t = C_t . h_t
+
+    u, dt: (B, T, D); a: (D, N); b, c: (B, T, N).  Returns y (B, T, D)
+    and the final state (B, D, N).
+    """
+    bsz, t, dd = u.shape
+    n = a.shape[1]
+    chunk = min(chunk, t)
+    if t % chunk:
+        pad = chunk - t % chunk
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        t_orig = t
+        t = t + pad
+    else:
+        t_orig = t
+    nchunks = t // chunk
+    u = u.reshape(bsz, nchunks, chunk, dd)
+    dt = dt.reshape(bsz, nchunks, chunk, dd)
+    b = b.reshape(bsz, nchunks, chunk, n)
+    c = c.reshape(bsz, nchunks, chunk, n)
+
+    def chunk_step(h0, args):
+        u_c, dt_c, b_c, c_c = args            # (B, chunk, ...)
+        decay = jnp.exp(dt_c[..., None] * a)  # (B, chunk, D, N)
+        inp = (dt_c * u_c)[..., None] * b_c[:, :, None, :]
+
+        def combine(x, y):
+            d1, s1 = x
+            d2, s2 = y
+            return d1 * d2, s1 * d2 + s2
+
+        dec_cum, s_cum = jax.lax.associative_scan(
+            combine, (decay, inp), axis=1)
+        h = dec_cum * h0[:, None] + s_cum      # (B, chunk, D, N)
+        y_c = jnp.einsum("btdn,btn->btd", h, c_c)
+        return h[:, -1], y_c
+
+    h_final, y = jax.lax.scan(
+        chunk_step,
+        jnp.zeros((bsz, dd, n), u.dtype),
+        (u.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2, 3),
+         b.transpose(1, 0, 2, 3), c.transpose(1, 0, 2, 3)),
+    )
+    y = y.transpose(1, 0, 2, 3).reshape(bsz, t, dd)[:, :t_orig]
+    return y, h_final
+
+
+def mamba_apply(
+    params: Dict,
+    x: jax.Array,                   # (B, S, d)
+    cfg,
+    *,
+    cache: Optional[Tuple] = None,  # (conv_state (B,k-1,D), ssm_state (B,D,N))
+    chunk: int = 128,
+):
+    """Returns (out (B,S,d), new_cache)."""
+    bsz, s, d = x.shape
+    d_in, dt_rank, n, k = _dims(cfg)
+    compute_dtype = x.dtype
+
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    u, z = jnp.split(xz, 2, axis=-1)           # (B, S, D) each
+
+    conv_w = params["conv_w"].astype(x.dtype)  # (k, D)
+    if cache is None:
+        u_pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+        conv_out = sum(
+            u_pad[:, i : i + s] * conv_w[i] for i in range(k)
+        ) + params["conv_b"].astype(x.dtype)
+        new_conv_state = u_pad[:, -(k - 1):] if k > 1 else None
+    else:
+        conv_state, ssm_state = cache
+        window = jnp.concatenate([conv_state.astype(x.dtype), u], axis=1)
+        conv_out = jnp.einsum("bkd,kd->bd", window, conv_w)[:, None]
+        conv_out = conv_out + params["conv_b"].astype(x.dtype)
+        new_conv_state = window[:, 1:]
+    u = jax.nn.silu(conv_out)
+
+    proj = jnp.einsum("bsd,de->bse", u, params["x_proj"].astype(x.dtype))
+    dt_lr, b_t, c_t = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jnp.einsum("bsr,rd->bsd", dt_lr, params["dt_proj"].astype(x.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))     # (D, N)
+
+    if cache is None:
+        y, h_last = _ssm_chunked(
+            u.astype(jnp.float32), dt, a,
+            b_t.astype(jnp.float32), c_t.astype(jnp.float32), chunk=chunk)
+        new_cache = (new_conv_state, h_last)
+    else:
+        _, ssm_state = cache
+        decay = jnp.exp(dt[:, 0, :, None] * a)             # (B, D, N)
+        h = ssm_state * decay + (dt[:, 0] * u[:, 0].astype(jnp.float32))[..., None] \
+            * b_t[:, 0, None, :].astype(jnp.float32)
+        y = jnp.einsum("bdn,bn->bd", h, c_t[:, 0].astype(jnp.float32))[:, None]
+        new_cache = (new_conv_state, h)
+
+    y = y.astype(compute_dtype)
+    y = y + u * params["d_skip"].astype(compute_dtype)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bsd,de->bse", y, params["out_proj"].astype(x.dtype)), new_cache

@@ -1,0 +1,127 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+MLA compresses the KV stream into a small latent: per token the cache
+stores only (kv_lora_rank + qk_rope_dim) values — 512 + 64 = 576 for
+DeepSeek-V3 — instead of 2*H*Dh.  That is what makes the long_500k
+decode shape feasible for this architecture (sub-quadratic *memory*):
+524288 tokens x 576 x 2B ≈ 0.6 GB/layer before model-axis sharding.
+
+Two computation paths:
+  * train / prefill — expand the latent into per-head K_nope and V and
+    run normal attention (expansion is re-materialised per block, never
+    cached);
+  * decode — the *absorbed* form: fold wkv_b's K-half into the query
+    (q_nope @ Wk per head -> a query in latent space) and keep the
+    attention-weighted sum in latent space, expanding through the
+    V-half only for the single new token.  Scores and reads touch only
+    the 576-wide latent cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import ParamDef, apply_rope, rms_norm
+from .attention import full_causal_attention, blockwise_causal_attention, NEG_INF
+
+
+def mla_defs(cfg) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    h = cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq_a": ParamDef((d, qr), P(None, None)),
+        "q_a_norm": {"scale": ParamDef((qr,), P(None), "ones")},
+        "wq_b": ParamDef((qr, h, dn + dr), P(None, "model", None)),
+        "wkv_a": ParamDef((d, kvr + dr), P(None, None)),
+        "kv_a_norm": {"scale": ParamDef((kvr,), P(None), "ones")},
+        "wk_b": ParamDef((kvr, h, dn), P(None, "model", None)),
+        "wv_b": ParamDef((kvr, h, dv), P(None, "model", None)),
+        "wo": ParamDef((h, dv, d), P("model", None, None)),
+    }
+
+
+def _project_q(params, x, positions, cfg):
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q_lat = jnp.einsum("bsd,dr->bsr", x, params["wq_a"].astype(x.dtype))
+    q_lat = rms_norm(q_lat, params["q_a_norm"]["scale"])
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, params["wq_b"].astype(x.dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(params, x, positions, cfg):
+    kvr, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"].astype(x.dtype))
+    c_kv, k_rope = kv[..., :kvr], kv[..., kvr:]
+    c_kv = rms_norm(c_kv, params["kv_a_norm"]["scale"])
+    # rope part is a single shared "head"
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_apply(
+    params: Dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg,
+    *,
+    cache: Optional[Tuple] = None,  # (c_kv_cache, k_rope_cache, cur_len)
+    block_q: int = 512,
+    block_kv: int = 512,
+    long_seq_threshold: int = 8192,
+):
+    d = cfg.d_model
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    scale = (dn + dr) ** -0.5
+
+    q_nope, q_rope = _project_q(params, x, positions, cfg)
+    c_kv, k_rope = _project_kv_latent(params, x, positions, cfg)
+
+    if cache is None:
+        # expanded path (train / prefill)
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["wk_b"].astype(x.dtype))
+        v = jnp.einsum("bsr,rhk->bshk", c_kv, params["wv_b"].astype(x.dtype))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      k_nope.shape[:3] + (dr,))], axis=-1)
+        if x.shape[1] > long_seq_threshold:
+            # pad V's head dim up to Q/K's so the fused kernel path can
+            # be shared; slice the padding off afterwards.
+            out = blockwise_causal_attention(
+                q, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv))),
+                scale=scale, block_q=block_q, block_kv=block_kv)[..., :dv]
+        else:
+            qk_dim = dn + dr
+            out = full_causal_attention(
+                q, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_dim - dv))),
+                scale=scale)[..., :dv]
+        new_cache = (c_kv, k_rope)
+    else:
+        # absorbed decode path: scores/reads stay in latent space
+        c_cache, r_cache, cur_len = cache
+        c_cache = jax.lax.dynamic_update_slice_in_dim(c_cache, c_kv, cur_len, 1)
+        r_cache = jax.lax.dynamic_update_slice_in_dim(r_cache, k_rope, cur_len, 1)
+        # absorb wk_b into q:  q_lat (B, 1, H, kvr)
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_b"].astype(x.dtype))
+        s = (jnp.einsum("bshr,bkr->bhsk", q_lat, c_cache,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bshk,bkk2->bhsk" if False else "bshr,bkr->bhsk",
+                          q_rope, r_cache,
+                          preferred_element_type=jnp.float32)) * scale
+        valid = jnp.arange(c_cache.shape[1]) < (cur_len + 1)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        attn_lat = jnp.einsum("bhsk,bkr->bshr", p, c_cache)  # (B,1,H,kvr)
+        out = jnp.einsum("bshr,rhk->bshk", attn_lat, params["wv_b"].astype(x.dtype))
+        new_cache = (c_cache, r_cache)
+
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return out, new_cache

@@ -1,0 +1,158 @@
+"""RWKV-6 "Finch" mixer — attention-free, data-dependent decay.
+
+Time-mix: token-shift with data-dependent (LoRA) interpolation feeding
+r/k/v/gate/decay projections; per-head WKV state recurrence
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t
+    y_t = r_t . (S_{t-1} + diag(u) k_t (x) v_t)
+with w_t = exp(-exp(w_base + lora(x))) per channel.  Heads are sharded
+over the 'model' axis.
+
+Training runs the recurrence with a rolled lax.scan over time (state is
+a few MB; per-step flops are outer products — RWKV's design point is
+exactly that this is cheap).  Decode carries (shift_tm, shift_cm, S)
+through the serve cache: O(1) state — this is why rwkv6 runs the
+long_500k shape that full-attention models skip.
+
+Channel-mix: squared-ReLU MLP with token shift and receptance gate.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import ParamDef
+
+__all__ = ["rwkv6_defs", "rwkv6_time_mix", "rwkv6_channel_mix"]
+
+_LORA_R = 32
+_DECAY_R = 64
+
+
+def rwkv6_defs(cfg) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    return {
+        "tm": {
+            # base lerp coefficients for (w, k, v, r, g) shifts
+            "mix_base": ParamDef((5, d), P(None, None), "zeros"),
+            "mix_lora_a": ParamDef((d, 5 * _LORA_R), P(None, None)),
+            "mix_lora_b": ParamDef((5, _LORA_R, d), P(None, None, None), "zeros"),
+            "w_base": ParamDef((d,), P(None), "zeros"),
+            "w_lora_a": ParamDef((d, _DECAY_R), P(None, None)),
+            "w_lora_b": ParamDef((_DECAY_R, d), P(None, None), "zeros"),
+            "u": ParamDef((h, hs), P("model", None), "zeros"),
+            "wr": ParamDef((d, h, hs), P(None, "model", None)),
+            "wk": ParamDef((d, h, hs), P(None, "model", None)),
+            "wv": ParamDef((d, h, hs), P(None, "model", None)),
+            "wg": ParamDef((d, h, hs), P(None, "model", None)),
+            "ln_x": {"scale": ParamDef((h, hs), P("model", None), "ones"),
+                     "bias": ParamDef((h, hs), P("model", None), "zeros")},
+            "wo": ParamDef((h, hs, d), P("model", None, None)),
+        },
+        "cm": {
+            "mix_k": ParamDef((d,), P(None), "zeros"),
+            "mix_r": ParamDef((d,), P(None), "zeros"),
+            "wk": ParamDef((d, cfg.d_ff), P(None, "model")),
+            "wr": ParamDef((d, d), P(None, None)),
+            "wv": ParamDef((cfg.d_ff, d), P("model", None)),
+        },
+    }
+
+
+def _token_shift(x, shift_state):
+    """x (B,S,d) -> previous-token stream; shift_state (B,d) is x_{-1}."""
+    prev = jnp.concatenate([shift_state[:, None], x[:, :-1]], axis=1)
+    return prev
+
+
+def rwkv6_time_mix(
+    params: Dict,
+    x: jax.Array,                      # (B, S, d)
+    cfg,
+    *,
+    cache: Optional[Tuple] = None,     # (shift_state (B,d), wkv_state (B,H,hs,hs))
+):
+    p = params["tm"]
+    bsz, s, d = x.shape
+    hs = cfg.rwkv_head_size
+    h = d // hs
+
+    shift_state = (cache[0] if cache is not None
+                   else jnp.zeros((bsz, d), x.dtype))
+    prev = _token_shift(x, shift_state)
+    dx = prev - x
+
+    # data-dependent lerp (LoRA over the 5 mix streams)
+    lora = jnp.tanh(jnp.einsum("bsd,dr->bsr", x + dx * p["mix_base"][0],
+                               p["mix_lora_a"].astype(x.dtype)))
+    lora = lora.reshape(bsz, s, 5, _LORA_R)
+    delta = jnp.einsum("bsfr,frd->bsfd", lora, p["mix_lora_b"].astype(x.dtype))
+    mix = p["mix_base"].astype(x.dtype)[None, None] + delta   # (B,S,5,d)
+    xw, xk, xv, xr, xg = [x + dx * mix[:, :, i] for i in range(5)]
+
+    # decay (per channel, data dependent)
+    w = p["w_base"].astype(jnp.float32) + jnp.einsum(
+        "bsr,rd->bsd",
+        jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["w_lora_a"].astype(x.dtype))
+                 ).astype(jnp.float32),
+        p["w_lora_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(w))                                   # (B,S,d) in (0,1)
+
+    r = jnp.einsum("bsd,dhk->bshk", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xv, p["wv"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,dhk->bshk", xg, p["wg"].astype(x.dtype)))
+    w = w.reshape(bsz, s, h, hs)
+    u = p["u"].astype(jnp.float32)
+
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+
+    def step(state, args):
+        r_t, k_t, v_t, w_t = args              # (B,H,hs)
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,hs,hs)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, state + u[..., :, None] * kv)
+        state = w_t[..., :, None] * state + kv
+        return state, y
+
+    state0 = (cache[1].astype(jnp.float32) if cache is not None
+              else jnp.zeros((bsz, h, hs, hs), jnp.float32))
+    xs = (rf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
+          vf.transpose(1, 0, 2, 3), wf.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(step, state0, xs)
+    y = ys.transpose(1, 0, 2, 3)               # (B,S,H,hs)
+
+    # per-head groupnorm
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = y * p["ln_x"]["scale"].astype(jnp.float32) \
+        + p["ln_x"]["bias"].astype(jnp.float32)
+    y = (y.astype(x.dtype) * g)
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"].astype(x.dtype))
+    new_cache = (x[:, -1], state)
+    return out, new_cache
+
+
+def rwkv6_channel_mix(
+    params: Dict,
+    x: jax.Array,
+    cfg,
+    *,
+    cache: Optional[jax.Array] = None,   # shift state (B, d)
+):
+    p = params["cm"]
+    bsz, s, d = x.shape
+    shift_state = cache if cache is not None else jnp.zeros((bsz, d), x.dtype)
+    prev = _token_shift(x, shift_state)
+    dx = prev - x
+    xk = x + dx * p["mix_k"].astype(x.dtype)
+    xr = x + dx * p["mix_r"].astype(x.dtype)
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"].astype(x.dtype))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype)))
+    return r * kv, x[:, -1]

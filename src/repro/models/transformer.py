@@ -1,0 +1,463 @@
+"""Model assembly: embeddings, layer-pattern segments (scan-stacked),
+LM head/loss, KV/state caches, MTP.
+
+Layer patterns (uniform, DeepSeek dense-prefix+MoE, Jamba 1:7
+Mamba/attention interleave with alternating MoE, RWKV) are normalised
+into *segments*: (n_repeats, [period of layer kinds]).  Parameters of
+each period position are stacked over n_repeats and the segment runs
+under one ``jax.lax.scan`` — compile time and HLO size are O(period),
+not O(num_layers), which is what keeps 61-88-layer dry-runs cheap.
+
+The same segment structure carries the serve cache (KV / latent-KV /
+conv+ssm state / rwkv state), scanned alongside the params.
+"""
+from __future__ import annotations
+
+from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import (ParamDef, apply_norm, norm_defs, init_params,
+                     param_shapes, param_specs, stack_defs, resolve_specs,
+                     sinusoidal_positions, cross_entropy_logits_sharded)
+from .attention import attention_defs, attention_apply, effective_heads
+from .mla import mla_defs, mla_apply
+from .ffn import ffn_defs, ffn_apply
+from .moe import moe_defs, moe_apply
+from .mamba import mamba_defs, mamba_apply, _dims as mamba_dims
+from .rwkv6 import rwkv6_defs, rwkv6_time_mix, rwkv6_channel_mix
+
+DP_AXES = ("pod", "data")
+
+
+def dp_axes(mesh) -> tuple:
+    """Data-parallel axes present in this mesh (single-pod has no 'pod')."""
+    return tuple(a for a in DP_AXES if a in mesh.shape)
+
+# ---------------------------------------------------------------------------
+# segment planning
+# ---------------------------------------------------------------------------
+
+
+def segment_plan(cfg) -> List[Tuple[int, List[Tuple[str, str]]]]:
+    kinds = [cfg.layer_kind(l) for l in range(cfg.num_layers)]
+    segments = []
+    start = 0
+    if cfg.first_dense_layers:
+        n = cfg.first_dense_layers
+        assert all(k == kinds[0] for k in kinds[:n])
+        segments.append((n, [kinds[0]]))
+        start = n
+    rest = kinds[start:]
+    if rest:
+        period = len(rest)
+        for p in range(1, len(rest) + 1):
+            if len(rest) % p == 0 and rest == rest[:p] * (len(rest) // p):
+                period = p
+                break
+        segments.append((len(rest) // period, rest[:period]))
+    return segments
+
+
+# ---------------------------------------------------------------------------
+# parameter declaration
+# ---------------------------------------------------------------------------
+
+
+def _mixer_defs(kind: str, cfg):
+    if kind == "attention":
+        return attention_defs(cfg)
+    if kind == "mla":
+        return mla_defs(cfg)
+    if kind == "mamba":
+        return mamba_defs(cfg)
+    if kind == "rwkv6":
+        return rwkv6_defs(cfg)       # includes channel-mix params
+    raise ValueError(kind)
+
+
+def _ffn_defs(kind: str, cfg):
+    if kind == "dense":
+        return ffn_defs(cfg)
+    if kind == "moe":
+        return moe_defs(cfg)
+    if kind == "rwkv_cm":
+        return {}                    # lives inside rwkv6_defs
+    raise ValueError(kind)
+
+
+def _layer_defs(kind: Tuple[str, str], cfg) -> Dict[str, Any]:
+    mix, ff = kind
+    defs = {
+        "norm1": norm_defs(cfg.d_model, cfg.norm),
+        "norm2": norm_defs(cfg.d_model, cfg.norm),
+        "mixer": _mixer_defs(mix, cfg),
+    }
+    ffd = _ffn_defs(ff, cfg)
+    if ffd:
+        defs["ffn"] = ffd
+    return defs
+
+
+def model_defs(cfg) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab_size
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((v, d), P("model", None), "normal"),
+        "final_norm": norm_defs(d, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        defs["head"] = ParamDef((d, v), P(None, "model"))
+    segments = []
+    for n_rep, period in segment_plan(cfg):
+        seg = [stack_defs(_layer_defs(kind, cfg), n_rep) for kind in period]
+        segments.append(seg)
+    defs["segments"] = segments
+    if cfg.mtp:
+        defs["mtp"] = {
+            "proj": ParamDef((2 * d, d), P(None, None)),
+            "norm_h": norm_defs(d, cfg.norm),
+            "norm_e": norm_defs(d, cfg.norm),
+            "block": _layer_defs((("mla" if cfg.mixer == "mla"
+                                   else "attention"), "dense"), cfg),
+        }
+    return defs
+
+
+def model_param_specs(cfg, mesh=None):
+    specs = param_specs(model_defs(cfg))
+    if mesh is not None:
+        specs = resolve_specs(specs, model_param_shapes(cfg), mesh)
+    return specs
+
+
+def model_param_shapes(cfg, dtype=None):
+    import jax.numpy as jnp
+    dt = dtype or getattr(jnp, cfg.dtype)
+    return param_shapes(model_defs(cfg), dtype_override=dt)
+
+
+def model_init(cfg, key, dtype=None):
+    import jax.numpy as jnp
+    dt = dtype or getattr(jnp, cfg.dtype)
+    return init_params(model_defs(cfg), key, dtype_override=dt)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache_shape(kind: Tuple[str, str], cfg, batch: int, max_len: int):
+    """ShapeDtypeStructs of one layer's serve cache."""
+    mix, _ = kind
+    dt = getattr(jnp, cfg.dtype)
+    dh = cfg.resolved_head_dim
+    if mix == "attention":
+        _, hkv_eff = effective_heads(cfg)
+        kv = (batch, max_len, hkv_eff, dh)
+        return (jax.ShapeDtypeStruct(kv, dt), jax.ShapeDtypeStruct(kv, dt))
+    if mix == "mla":
+        return (jax.ShapeDtypeStruct((batch, max_len, cfg.kv_lora_rank), dt),
+                jax.ShapeDtypeStruct((batch, max_len, cfg.qk_rope_dim), dt))
+    if mix == "mamba":
+        d_in, _, n, k = mamba_dims(cfg)
+        return (jax.ShapeDtypeStruct((batch, k - 1, d_in), dt),
+                jax.ShapeDtypeStruct((batch, d_in, n), jnp.float32))
+    if mix == "rwkv6":
+        d = cfg.d_model
+        h = d // cfg.rwkv_head_size
+        return (jax.ShapeDtypeStruct((batch, d), dt),
+                jax.ShapeDtypeStruct((batch, h, cfg.rwkv_head_size,
+                                      cfg.rwkv_head_size), jnp.float32),
+                jax.ShapeDtypeStruct((batch, d), dt))  # cm shift
+    raise ValueError(mix)
+
+
+def _cache_spec_one(kind: Tuple[str, str], cfg, dp=DP_AXES,
+                    seq_axes=("model",)):
+    mix, _ = kind
+    tp = "model"
+    DP_AXES_ = dp
+    seq = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+    if mix == "attention":
+        # split-KV: sequence dim sharded over 'model' (KV heads rarely
+        # divide a 16-way axis); GSPMD partitions the softmax reductions
+        # into the FlashDecoding-style combine automatically.  When the
+        # batch cannot cover the data axes (long_500k: batch 1) the data
+        # axes also move onto the sequence dim.
+        s = P(DP_AXES_, seq, None, None)
+        return (s, s)
+    if mix == "mla":
+        return (P(DP_AXES_, seq, None), P(DP_AXES_, seq, None))
+    if mix == "mamba":
+        return (P(DP_AXES_, None, tp), P(DP_AXES_, tp, None))
+    if mix == "rwkv6":
+        return (P(DP_AXES_, None), P(DP_AXES_, tp, None, None),
+                P(DP_AXES_, None))
+    raise ValueError(mix)
+
+
+def cache_shapes(cfg, batch: int, max_len: int):
+    out = []
+    for n_rep, period in segment_plan(cfg):
+        seg = []
+        for kind in period:
+            shapes = _layer_cache_shape(kind, cfg, batch, max_len)
+            seg.append(tuple(
+                jax.ShapeDtypeStruct((n_rep,) + s.shape, s.dtype)
+                for s in shapes))
+        out.append(seg)
+    return out
+
+
+def cache_specs(cfg, mesh=None, batch=None):
+    dp = dp_axes(mesh) if mesh is not None else DP_AXES
+    seq_axes = ("model",)
+    if batch is not None and mesh is not None:
+        n_dp = 1
+        for a in dp:
+            n_dp *= mesh.shape[a]
+        if batch % max(n_dp, 1) != 0:
+            # batch can't shard over the data axes: put them on the
+            # sequence dim instead (long_500k single-sequence decode)
+            seq_axes = dp + ("model",)
+            dp = ()
+    out = []
+    for n_rep, period in segment_plan(cfg):
+        seg = []
+        for kind in period:
+            seg.append(tuple(P(*((None,) + tuple(s)))
+                             for s in _cache_spec_one(kind, cfg, dp, seq_axes)))
+        out.append(seg)
+    return out
+
+
+def cache_init(cfg, batch: int, max_len: int):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        cache_shapes(cfg, batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(kind, lp, x, positions, cfg, mesh, cache, cur_len,
+                 collect=False):
+    """One layer. cache is None (train/prefill) or this layer's cache
+    slice (decode).  With collect=True (prefill) the cache the layer
+    *would have written* is returned even when none was passed in."""
+    mix, ff = kind
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(x, lp["norm1"], cfg.norm)
+    if mix == "attention":
+        c = None if cache is None else (cache[0], cache[1], cur_len)
+        out, new_c = attention_apply(
+            lp["mixer"], h, positions, cfg, cache=c,
+            block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+            long_seq_threshold=cfg.long_seq_threshold)
+    elif mix == "mla":
+        c = None if cache is None else (cache[0], cache[1], cur_len)
+        out, new_c = mla_apply(
+            lp["mixer"], h, positions, cfg, cache=c,
+            block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+            long_seq_threshold=cfg.long_seq_threshold)
+    elif mix == "mamba":
+        c = None if cache is None else (cache[0], cache[1])
+        out, new_c = mamba_apply(lp["mixer"], h, cfg, cache=c)
+    elif mix == "rwkv6":
+        c = None if cache is None else (cache[0], cache[1])
+        out, new_c = rwkv6_time_mix(lp["mixer"], h, cfg, cache=c)
+    else:
+        raise ValueError(mix)
+    x = x + out
+
+    h = apply_norm(x, lp["norm2"], cfg.norm)
+    if ff == "dense":
+        x = x + ffn_apply(lp["ffn"], h, cfg)
+    elif ff == "moe":
+        out, aux = moe_apply(lp["ffn"], h, cfg, mesh=mesh)
+        out = _checkpoint_name(out, "moe_out")
+        x = x + out
+    elif ff == "rwkv_cm":
+        cm_cache = None if cache is None else cache[2]
+        out, cm_state = rwkv6_channel_mix(lp["mixer"], h, cfg, cache=cm_cache)
+        x = x + out
+        if cache is not None or collect:
+            new_c = new_c + (cm_state,)
+    else:
+        raise ValueError(ff)
+
+    if cache is None and not collect:
+        new_c = None
+    return x, aux, new_c
+
+
+def _remat_wrap(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.remat == "save_moe":
+        # save the (cheap, small) MoE layer outputs so the backward pass
+        # never recomputes the expert FFN — recompute would re-gather
+        # the FSDP expert weights: ~1.4 GB/layer/microbatch of pure
+        # collective traffic at DeepSeek scale (EXPERIMENTS.md §Perf)
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.save_only_these_names(
+                "moe_out"))
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+def forward(
+    params: Dict,
+    inputs: jax.Array,              # (B, S) int32 or (B, S, d) embeddings
+    cfg,
+    mesh,
+    *,
+    positions: Optional[jax.Array] = None,
+    cache=None,                     # segment-structured cache or None
+    cur_len=None,                   # int32 scalar (decode)
+    collect_cache: bool = False,    # prefill: return would-be caches
+):
+    """Returns (logits, hidden, aux_loss, new_cache)."""
+    dt = getattr(jnp, cfg.dtype)
+    if cfg.input_mode == "embeddings" or inputs.ndim == 3:
+        x = inputs.astype(dt)
+    else:
+        x = jnp.take(params["embed"], inputs, axis=0).astype(dt)
+    b, s = x.shape[:2]
+    if positions is None:
+        if cur_len is not None:
+            positions = jnp.broadcast_to(cur_len, (b, s)).astype(jnp.int32)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.pos_emb == "sinusoidal":
+        x = x + sinusoidal_positions(positions, cfg.d_model).astype(dt)
+
+    x = jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(dp_axes(mesh), None, None)))
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache = [] if (cache is not None or collect_cache) else None
+    plan = segment_plan(cfg)
+
+    for si, (n_rep, period) in enumerate(plan):
+        seg_params = params["segments"][si]
+        seg_cache = cache[si] if cache is not None else None
+
+        # sequence-parallel residual stream: keep x sharded over the TP
+        # axis between layers (checkpointed carries shrink by the TP
+        # degree and GSPMD turns the TP all-reduces into AG+RS pairs)
+        sp_on = (cfg.sequence_parallel and cache is None
+                 and s % mesh.shape.get("model", 1) == 0
+                 and mesh.shape.get("model", 1) > 1)
+
+        def sp_constraint(v):
+            if not sp_on:
+                return v
+            return jax.lax.with_sharding_constraint(
+                v, jax.sharding.NamedSharding(
+                    mesh, P(dp_axes(mesh), "model", None)))
+
+        def seg_body(carry, xs, _period=period):
+            xc, auxc = carry
+            lps, cslices = xs
+            new_cslices = []
+            for pi, kind in enumerate(_period):
+                cslice = None if cslices is None else cslices[pi]
+
+                def layer_fn(lp, xin, _kind=kind, _cslice=cslice):
+                    return _apply_layer(
+                        _kind, lp, xin, positions, cfg, mesh, _cslice,
+                        cur_len, collect=collect_cache)
+
+                if (len(_period) > 1 and cfg.remat != "none"
+                        and cslices is None and not collect_cache):
+                    # nested remat: periods with several sub-layers
+                    # (jamba's 8) would otherwise keep every sub-layer's
+                    # internals alive during the period's backward
+                    layer_fn = jax.checkpoint(
+                        layer_fn,
+                        policy=jax.checkpoint_policies.nothing_saveable)
+                xc, aux, nc = layer_fn(lps[pi], xc)
+                xc = sp_constraint(xc)
+                auxc = auxc + aux
+                new_cslices.append(nc)
+            ys = (tuple(new_cslices)
+                  if (cslices is not None or collect_cache) else None)
+            return (xc, auxc), ys
+
+        seg_body = _remat_wrap(seg_body, cfg)
+        xs = (seg_params, tuple(seg_cache) if seg_cache is not None else None)
+        (x, aux_total), ys = jax.lax.scan(
+            seg_body, (x, aux_total), xs, length=n_rep)
+        if new_cache is not None:
+            new_cache.append(list(ys))
+
+    hidden = apply_norm(x, params["final_norm"], cfg.norm)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", hidden,
+                            params["embed"].astype(hidden.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", hidden,
+                            params["head"].astype(hidden.dtype))
+    logits = jax.lax.with_sharding_constraint(
+        logits,
+        jax.sharding.NamedSharding(mesh, P(dp_axes(mesh), None, "model")))
+    return logits, hidden, aux_total, new_cache
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params, batch, cfg, mesh) -> Tuple[jax.Array, Dict]:
+    """batch: {"inputs": (B,S) or (B,S,d), "labels": (B,S)}."""
+    logits, hidden, aux, _ = forward(params, batch["inputs"], cfg, mesh)
+    labels = batch["labels"]
+    loss = cross_entropy_logits_sharded(logits, labels)
+    metrics = {"nll": loss, "aux": aux}
+    if cfg.moe:
+        loss = loss + 0.01 * aux
+    if cfg.mtp:
+        mtp_loss = _mtp_loss(params, hidden, batch, cfg, mesh)
+        metrics["mtp"] = mtp_loss
+        loss = loss + cfg.mtp_weight * mtp_loss
+    return loss, metrics
+
+
+def _mtp_loss(params, hidden, batch, cfg, mesh):
+    """DeepSeek-V3 multi-token prediction (depth 1, dense-FFN block)."""
+    mp = params["mtp"]
+    tokens = batch["labels"]            # next tokens (t+1) at each position
+    dt = hidden.dtype
+    emb_next = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    h = jnp.concatenate(
+        [apply_norm(hidden, mp["norm_h"], cfg.norm),
+         apply_norm(emb_next, mp["norm_e"], cfg.norm)], axis=-1)
+    h = jnp.einsum("bse,ed->bsd", h, mp["proj"].astype(dt))
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    kind = ("mla" if cfg.mixer == "mla" else "attention", "dense")
+    h, _, _ = _apply_layer(kind, mp["block"], h, positions, cfg, mesh,
+                           None, None)
+    h = apply_norm(h, params["final_norm"], cfg.norm)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(dt))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", h, params["head"].astype(dt))
+    # predict t+2: labels shifted one more step
+    labels2 = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]], axis=1)
+    valid = jnp.concatenate(
+        [jnp.ones((b, s - 1), bool), jnp.zeros((b, 1), bool)], axis=1)
+    return cross_entropy_logits_sharded(logits, labels2, valid_mask=valid)

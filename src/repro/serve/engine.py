@@ -1,0 +1,82 @@
+"""Serving: prefill + decode steps over the segment-structured cache.
+
+``prefill_step`` runs the full-sequence forward while returning the
+caches each layer would have written (the per-layer (k, v) / latent /
+state tuples), laid out exactly like ``decode_step`` consumes them.
+``decode_step`` appends one token: the decode_32k / long_500k dry-run
+shapes lower this function.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as T
+
+__all__ = ["decode_step", "serve_input_specs", "decode_shardings",
+           "init_serve_state"]
+
+
+def init_serve_state(cfg, batch: int, max_len: int):
+    """Zero caches + cur_len = 0."""
+    return {"cache": T.cache_init(cfg, batch, max_len),
+            "cur_len": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params, state, tokens_or_embeds, cfg, mesh):
+    """One decode step.
+
+    tokens_or_embeds: (B, 1) int32 (or (B, 1, d) for stub-frontend
+    archs).  Returns (next_tokens (B, 1), new_state).
+    """
+    logits, _hidden, _aux, new_cache = T.forward(
+        params, tokens_or_embeds, cfg, mesh,
+        cache=state["cache"], cur_len=state["cur_len"])
+    next_tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    return next_tokens, {"cache": new_cache,
+                         "cur_len": state["cur_len"] + 1}
+
+
+def decode_shardings(cfg, mesh, *, batch=None, kv_len=None):
+    from repro.models.common import resolve_specs
+    ns = lambda spec: NamedSharding(mesh, spec)
+    cspecs = T.cache_specs(cfg, mesh, batch=batch)
+    if batch is not None and kv_len is not None:
+        cshapes = T.cache_shapes(cfg, batch, kv_len)
+        cspecs = resolve_specs(cspecs, cshapes, mesh)
+    cspecs = jax.tree_util.tree_map(
+        ns, cspecs, is_leaf=lambda x: isinstance(x, P))
+    state_sh = {"cache": cspecs, "cur_len": ns(P())}
+    dp = T.dp_axes(mesh)
+    if batch is not None:
+        n_dp = 1
+        for a in dp:
+            n_dp *= mesh.shape[a]
+        if batch % max(n_dp, 1) != 0:
+            dp = ()
+    if cfg.input_mode == "embeddings":
+        tok_sh = ns(P(dp, None, None))
+    else:
+        tok_sh = ns(P(dp, None))
+    return state_sh, tok_sh
+
+
+def serve_input_specs(cfg, *, batch: int, kv_len: int):
+    """ShapeDtypeStructs for the decode dry-run: one new token with a
+    KV cache of kv_len."""
+    dt = jnp.int32
+    if cfg.input_mode == "embeddings":
+        tokens = jax.ShapeDtypeStruct((batch, 1, cfg.d_model),
+                                      getattr(jnp, cfg.dtype))
+    else:
+        tokens = jax.ShapeDtypeStruct((batch, 1), dt)
+    state = {
+        "cache": T.cache_shapes(cfg, batch, kv_len),
+        "cur_len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    return state, tokens

@@ -1,0 +1,24 @@
+"""Prefill: full-sequence forward that also materialises the KV /
+state caches decode will consume.  The prefill_32k dry-run shape lowers
+``prefill_step``."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+__all__ = ["prefill_step"]
+
+
+def prefill_step(params, inputs, cfg, mesh):
+    """inputs: (B, S) tokens or (B, S, d) embeddings.
+
+    Returns (next_tokens (B, 1), prefill_cache, cur_len).
+    The cache covers positions [0, S); decode continues at S.
+    """
+    logits, _hidden, _aux, cache = T.forward(
+        params, inputs, cfg, mesh, collect_cache=True)
+    next_tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    s = inputs.shape[1]
+    return next_tokens, cache, jnp.asarray(s, jnp.int32)

@@ -1,0 +1,152 @@
+"""Checkpointing: sharded-aware save/restore with manifest, rotation,
+and elastic re-shard on restore.
+
+Layout:  <dir>/step_<N>/manifest.json + one .npy per leaf (keyed by the
+flattened tree path).  Restore accepts a *different* mesh / sharding
+than the one that saved — arrays are loaded to host and re-placed with
+the target sharding, which is the elastic-rescale path (checkpoint on
+512 chips, resume on 256, or CPU).
+
+On a real multi-host deployment each host writes only the shards it
+owns (jax.experimental.multihost_utils / distributed arrays); the
+single-process container collapses that to full-array writes, but the
+manifest format and restore path are host-count-agnostic.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "CheckpointManager"]
+
+
+def _leaf_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(directory: str, step: int, state: Any,
+                    *, keep_last: int = 3) -> str:
+    """Write state pytree at <directory>/step_<step>. Atomic via rename."""
+    tmp = os.path.join(directory, f".tmp_step_{step}")
+    final = os.path.join(directory, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    leaves = jax.tree_util.tree_flatten_with_path(state)[0]
+    manifest = {"step": step, "leaves": []}
+    for path, leaf in leaves:
+        key = _leaf_key(path)
+        fname = key.replace("/", "__") + ".npy"
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append({
+            "key": key, "file": fname,
+            "shape": list(arr.shape), "dtype": str(arr.dtype),
+        })
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _rotate(directory, keep_last)
+    return final
+
+
+def _rotate(directory: str, keep_last: int):
+    steps = sorted(all_steps(directory))
+    for s in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(directory, f"step_{s}"), ignore_errors=True)
+
+
+def all_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(directory, name, "manifest.json")):
+            out.append(int(m.group(1)))
+    return out
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = all_steps(directory)
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, target: Any,
+                       shardings: Any = None) -> Any:
+    """Restore into the structure of ``target`` (pytree of arrays or
+    ShapeDtypeStructs).  ``shardings`` (same structure) re-places leaves
+    — pass shardings built from a *different* mesh to rescale."""
+    d = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_key = {e["key"]: e for e in manifest["leaves"]}
+    paths, treedef = jax.tree_util.tree_flatten_with_path(target)
+    shard_leaves = (jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+        if shardings is not None else [None] * len(paths))
+    out = []
+    for (path, leaf), sh in zip(paths, shard_leaves):
+        key = _leaf_key(path)
+        if key not in by_key:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = np.load(os.path.join(d, by_key[key]["file"]))
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != target {leaf.shape}")
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Periodic save with optional async (background-thread) writes."""
+
+    def __init__(self, directory: str, every: int = 100,
+                 keep_last: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.every = every
+        self.keep_last = keep_last
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+
+    def maybe_save(self, step: int, state: Any) -> bool:
+        if step % self.every:
+            return False
+        self.wait()
+        # device_get in the caller's thread for a consistent snapshot
+        host_state = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), state)
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=save_checkpoint,
+                args=(self.directory, step, host_state),
+                kwargs={"keep_last": self.keep_last}, daemon=True)
+            self._thread.start()
+        else:
+            save_checkpoint(self.directory, step, host_state,
+                            keep_last=self.keep_last)
+        return True
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,101 @@
+"""Train-step factory: loss -> grad -> clip -> optimizer, with optional
+microbatch gradient accumulation, all under explicit shardings."""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as T
+from .optimizer import Optimizer, OptConfig, make_optimizer
+
+__all__ = ["make_train_step", "batch_specs", "TrainState"]
+
+
+def batch_specs(cfg, mesh=None):
+    dp = ("pod", "data")
+    if mesh is not None:
+        dp = tuple(a for a in dp if a in mesh.shape)
+    if cfg.input_mode == "embeddings":
+        return {"inputs": P(dp, None, None), "labels": P(dp, None)}
+    return {"inputs": P(dp, None), "labels": P(dp, None)}
+
+
+def make_train_step(cfg, mesh, opt: Optimizer, *, n_microbatches: int = 1,
+                    grad_shardings=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  With n_microbatches > 1 the global batch is split along
+    the batch axis and gradients accumulate through a lax.scan —
+    per-microbatch activation memory, one optimizer step.
+    """
+
+    def loss_fn(params, batch):
+        return T.lm_loss(params, batch, cfg, mesh)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def constrain(grads):
+        # ZeRO: accumulate/consume grads in the optimizer-state sharding
+        # (dp-sharded); GSPMD then reduce-scatters the DP grad sum and
+        # all-gathers params once after the update.
+        if grad_shardings is None:
+            return grads
+        return jax.lax.with_sharding_constraint(grads, grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches == 1:
+            loss, metrics, grads = grads_of(params, batch)
+            grads = constrain(grads)
+        else:
+            def reshape(x):
+                b = x.shape[0]
+                mb = b // n_microbatches
+                return x.reshape((n_microbatches, mb) + x.shape[1:])
+
+            micro = jax.tree_util.tree_map(reshape, batch)
+            zero_g = constrain(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+            def acc_step(carry, mb):
+                g_acc, loss_acc = carry
+                loss, _metrics, g = grads_of(params, mb)
+                g = constrain(jax.tree_util.tree_map(
+                    lambda x: x.astype(jnp.float32), g))
+                g_acc = jax.tree_util.tree_map(lambda a, b_: a + b_, g_acc, g)
+                return (constrain(g_acc), loss_acc + loss), None
+
+            (grads, loss), _ = jax.lax.scan(
+                acc_step, (zero_g, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / n_microbatches, grads)
+            loss = loss / n_microbatches
+            metrics = {"nll": loss}
+
+        new_params, new_opt_state, opt_metrics = opt.update(
+            grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return new_params, new_opt_state, metrics
+
+    return train_step
+
+
+def shardings_for(cfg, mesh, opt: Optimizer):
+    """(param_shardings, opt_shardings, batch_shardings) NamedShardings."""
+    pspecs = T.model_param_specs(cfg, mesh)
+    pshapes = T.model_param_shapes(cfg)
+    ospecs = opt.state_specs(pspecs, pshapes, mesh=mesh)
+    ns = lambda spec: NamedSharding(mesh, spec)
+    return (
+        jax.tree_util.tree_map(ns, pspecs, is_leaf=lambda x: isinstance(x, P)),
+        jax.tree_util.tree_map(ns, ospecs, is_leaf=lambda x: isinstance(x, P)),
+        jax.tree_util.tree_map(ns, batch_specs(cfg, mesh),
+                               is_leaf=lambda x: isinstance(x, P)),
+    )

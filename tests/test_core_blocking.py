@@ -1,0 +1,119 @@
+"""Host-side core units: block layouts, Morton traversal, stack plans,
+densify/undensify round trips — plus hypothesis property tests on the
+system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.blocking import (BlockLayout, GridSpec, morton_order,
+                                 block_cyclic_owner, ceil_div)
+from repro.core.stacks import build_stacks, stack_statistics, STACK_SIZE
+from repro.core.densify import to_blocks, from_blocks, densify, undensify
+from repro.core.tall_skinny import classify_shape
+
+
+def test_block_layout_basics():
+    l = BlockLayout(128, 256, 32, 64)
+    assert l.nblock_rows == 4 and l.nblock_cols == 4
+    assert l.nblocks == 16
+    with pytest.raises(ValueError):
+        BlockLayout(100, 64, 32, 64)
+
+
+def test_morton_order_is_permutation():
+    for nr, nc in [(4, 4), (3, 5), (1, 7), (8, 2)]:
+        order = morton_order(nr, nc)
+        assert order.shape == (nr * nc, 2)
+        flat = order[:, 0] * nc + order[:, 1]
+        assert sorted(flat.tolist()) == list(range(nr * nc))
+
+
+def test_morton_locality():
+    """Z-order keeps consecutive entries close (cache-oblivious)."""
+    order = morton_order(8, 8).astype(np.int64)
+    jumps = np.abs(np.diff(order[:, 0])) + np.abs(np.diff(order[:, 1]))
+    assert jumps.mean() < 2.5   # row-major would average ~2 too but with
+    assert jumps.max() <= 8     # long 7-step row breaks; Z stays local
+
+
+def test_build_stacks_dense_counts():
+    a = BlockLayout(128, 128, 32, 32)
+    b = BlockLayout(128, 64, 32, 32)
+    plans = build_stacks(a, b, stack_size=10)
+    stats = stack_statistics(plans)
+    assert stats["n_multiplications"] == 4 * 4 * 2
+    # c-runs (length nbk=4) are never split across stacks
+    for p in plans:
+        c = p.triples[:, 2]
+        assert (np.diff(np.flatnonzero(np.r_[True, c[1:] != c[:-1]])) == 4).all() \
+            or len(p.triples) <= 4
+
+
+def test_stack_c_contiguity():
+    """Each C block's updates form one contiguous run (kernel invariant)."""
+    a = BlockLayout(64, 96, 16, 16)
+    b = BlockLayout(96, 80, 16, 16)
+    for p in build_stacks(a, b, stack_size=30):
+        c = p.triples[:, 2]
+        seen = set()
+        prev = None
+        for x in c.tolist():
+            if x != prev:
+                assert x not in seen, "C block revisited non-contiguously"
+                seen.add(x)
+                prev = x
+
+
+def test_block_cyclic_owner():
+    assert block_cyclic_owner(5, 7, 4, 4) == (1, 3)
+
+
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(1, 4),
+       st.integers(1, 4))
+@settings(max_examples=30, deadline=None)
+def test_to_from_blocks_roundtrip(nbr, nbc, bm, bn):
+    x = np.arange(nbr * bm * nbc * bn, dtype=np.float32).reshape(
+        nbr * bm, nbc * bn)
+    blocks = to_blocks(jnp.asarray(x), bm, bn)
+    assert blocks.shape == (nbr * nbc, bm, bn)
+    back = from_blocks(blocks, nbr, nbc)
+    np.testing.assert_array_equal(np.asarray(back), x)
+    # densify on blocked payload == original dense matrix
+    np.testing.assert_array_equal(np.asarray(densify(blocks, nbr, nbc)), x)
+    np.testing.assert_array_equal(
+        np.asarray(undensify(jnp.asarray(x), bm, bn)), np.asarray(blocks))
+
+
+@given(st.integers(32, 4096), st.integers(32, 4096), st.integers(32, 4096))
+@settings(max_examples=50, deadline=None)
+def test_classify_shape_properties(m, k, n):
+    algo = classify_shape(m, k, n)
+    dims = {"m": m, "k": k, "n": n}
+    if algo.startswith("ts_"):
+        big = algo[3:]
+        others = [v for kk, v in dims.items() if kk != big]
+        assert dims[big] >= 8 * max(others)
+    else:
+        assert algo == "cannon"
+
+
+def test_classify_paper_shapes():
+    # paper section IV: square 63360^3 -> cannon; rectangular
+    # 1408 x 1982464 x 1408 -> tall-skinny
+    assert classify_shape(63360, 63360, 63360) == "cannon"
+    assert classify_shape(1408, 1982464, 1408) == "ts_k"
+
+
+@given(st.sampled_from([16, 22, 32, 64]),
+       st.integers(1, 5), st.integers(1, 5), st.integers(1, 5))
+@settings(max_examples=30, deadline=None)
+def test_stack_flops_invariant(bs, nbr, nbk, nbc):
+    """Sum of stack flops == 2*M*K*N regardless of stack_size."""
+    a = BlockLayout(nbr * bs, nbk * bs, bs, bs)
+    b = BlockLayout(nbk * bs, nbc * bs, bs, bs)
+    for stack_size in (7, STACK_SIZE):
+        plans = build_stacks(a, b, stack_size=stack_size)
+        total = sum(p.flops() for p in plans)
+        assert total == 2 * a.rows * a.cols * b.cols

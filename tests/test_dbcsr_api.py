@@ -1,0 +1,64 @@
+"""DBCSRMatrix API semantics (single-device: the ops are mesh-agnostic;
+the distributed multiply itself is covered by test_distributed.py)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dbcsr
+from repro.core.blocking import GridSpec
+from repro.launch.mesh import make_mesh
+
+
+@pytest.fixture(scope="module")
+def setup(rng):
+    mesh = make_mesh((1, 1), ("data", "model"))
+    grid = GridSpec("data", "model")
+    A = rng.randn(128, 128).astype(np.float32)
+    B = rng.randn(128, 128).astype(np.float32)
+    return mesh, grid, A, B
+
+
+def test_create_and_roundtrip(setup, rng):
+    mesh, grid, A, B = setup
+    Am = dbcsr.create(A, mesh=mesh, grid=grid, block_size=32)
+    np.testing.assert_array_equal(np.asarray(Am.data), A)
+    assert Am.layout.nblocks == 16
+    assert Am.occupancy == 1.0
+
+
+def test_add_trace_transpose_scale(setup):
+    mesh, grid, A, B = setup
+    Am = dbcsr.create(A, mesh=mesh, grid=grid, block_size=32)
+    Bm = dbcsr.create(B, mesh=mesh, grid=grid, block_size=32)
+    np.testing.assert_allclose(np.asarray(dbcsr.add(Am, Bm).data), A + B,
+                               rtol=1e-6)
+    np.testing.assert_allclose(float(dbcsr.trace(Am)), np.trace(A), rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(dbcsr.transpose(Am).data), A.T)
+    np.testing.assert_allclose(np.asarray(Am.scale(2.5).data), 2.5 * A,
+                               rtol=1e-6)
+
+
+def test_multiply_vector(setup, rng):
+    mesh, grid, A, B = setup
+    Am = dbcsr.create(A, mesh=mesh, grid=grid, block_size=32)
+    x = jnp.asarray(rng.randn(128).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(dbcsr.multiply_vector(Am, x)),
+                               A @ np.asarray(x), rtol=1e-4, atol=1e-4)
+
+
+def test_block_sparse_semantics(setup):
+    mesh, grid, A, B = setup
+    mask = np.zeros((4, 4), bool)
+    mask[0, :] = True
+    mask[:, 0] = True
+    Am = dbcsr.create(A, mesh=mesh, grid=grid, block_size=32, block_mask=mask)
+    assert abs(Am.occupancy - 7 / 16) < 1e-9
+    dense_mask = np.repeat(np.repeat(mask, 32, 0), 32, 1)
+    np.testing.assert_array_equal(np.asarray(Am.data), A * dense_mask)
+    # sparse x sparse result mask = boolean matmul of the masks
+    Bm = dbcsr.create(B, mesh=mesh, grid=grid, block_size=32, block_mask=mask)
+    Cm = dbcsr.multiply(Am, Bm, mesh=mesh, algorithm="cannon")
+    expected_mask = (mask.astype(int) @ mask.astype(int)) > 0
+    np.testing.assert_array_equal(Cm.block_mask, expected_mask)

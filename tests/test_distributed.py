@@ -1,0 +1,121 @@
+"""Distributed-engine correctness on multi-device host meshes.
+
+Each test spawns one subprocess with XLA_FLAGS host devices (the main
+pytest process keeps the default 1 device, per the dry-run contract).
+One subprocess runs a battery of checks and prints JSON; asserting on
+the parsed output keeps the expensive startup to a single process per
+battery.
+"""
+import json
+
+import pytest
+
+from conftest import run_subprocess_devices
+
+BATTERY = r"""
+import json
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+
+from repro.core.blocking import GridSpec
+from repro.core.cannon import cannon_matmul
+from repro.core.cannon25d import cannon25d_matmul
+from repro.core.tall_skinny import tall_skinny_matmul
+from repro.core.summa import summa_matmul
+from repro.core.multiply import distributed_matmul
+from repro.core import dbcsr
+
+rng = np.random.RandomState(0)
+out = {}
+
+mesh = jax.make_mesh((4, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+grid = GridSpec("data", "model")
+M, K, N = 128, 256, 192
+A = rng.randn(M, K).astype(np.float32)
+B = rng.randn(K, N).astype(np.float32)
+sh = NamedSharding(mesh, P("data", "model"))
+Ad, Bd = jax.device_put(A, sh), jax.device_put(B, sh)
+ref = A @ B
+err = lambda C: float(np.max(np.abs(np.asarray(C) - ref)))
+
+out["cannon"] = err(jax.jit(lambda a, b: cannon_matmul(a, b, mesh=mesh, grid=grid))(Ad, Bd))
+out["cannon_rolled"] = err(jax.jit(lambda a, b: cannon_matmul(
+    a, b, mesh=mesh, grid=grid, double_buffer=False))(Ad, Bd))
+out["summa_psum"] = err(jax.jit(lambda a, b: summa_matmul(a, b, mesh=mesh, grid=grid))(Ad, Bd))
+out["summa_gather"] = err(jax.jit(lambda a, b: summa_matmul(
+    a, b, mesh=mesh, grid=grid, bcast="gather"))(Ad, Bd))
+out["auto_square"] = err(distributed_matmul(Ad, Bd, mesh=mesh, grid=grid))
+out["blocked_ref"] = err(distributed_matmul(
+    Ad, Bd, mesh=mesh, grid=grid, algorithm="cannon", densify=False,
+    block_m=16, block_k=16, block_n=16, local_kernel="ref"))
+out["blocked_smm"] = err(distributed_matmul(
+    Ad, Bd, mesh=mesh, grid=grid, algorithm="cannon", densify=False,
+    block_m=16, block_k=16, block_n=16, local_kernel="smm"))
+
+# tall-skinny: K large (the paper's rectangular case); M divisible by
+# the 16-device flattened grid for the reduce_scatter variant
+Kbig = 2048
+A2 = rng.randn(32, Kbig).astype(np.float32)
+B2 = rng.randn(Kbig, 40).astype(np.float32)
+A2d = jax.device_put(A2, NamedSharding(mesh, P(None, ("data", "model"))))
+B2d = jax.device_put(B2, NamedSharding(mesh, P(("data", "model"), None)))
+ref2 = A2 @ B2
+for mode, red in [("all_reduce", "all_reduce"), ("reduce_scatter", "reduce_scatter")]:
+    C = jax.jit(lambda a, b: tall_skinny_matmul(
+        a, b, mesh=mesh, grid=grid, reduce=red))(A2d, B2d)
+    out[f"ts_k_{red}"] = float(np.max(np.abs(np.asarray(C) - ref2)))
+
+# ts_m / ts_n zero-communication variants
+A3 = rng.randn(512, 32).astype(np.float32); B3 = rng.randn(32, 48).astype(np.float32)
+A3d = jax.device_put(A3, NamedSharding(mesh, P(("data","model"), None)))
+B3d = jax.device_put(B3, NamedSharding(mesh, P(None, None)))
+C = jax.jit(lambda a, b: tall_skinny_matmul(a, b, mesh=mesh, grid=grid, mode="ts_m"))(A3d, B3d)
+out["ts_m"] = float(np.max(np.abs(np.asarray(C) - A3 @ B3)))
+
+# DBCSR api + block-sparse occupancy semantics
+mask = np.ones((4, 8), bool); mask[1] = False; mask[:, 3] = False
+Am = dbcsr.create(A, mesh=mesh, grid=grid, block_size=32, block_mask=mask)
+Bm = dbcsr.create(B, mesh=mesh, grid=grid, block_size=32)
+Cm = dbcsr.multiply(Am, Bm, mesh=mesh, algorithm="cannon")
+A_masked = A * np.repeat(np.repeat(mask, 32, 0), 32, 1)
+out["sparse_api"] = float(np.max(np.abs(np.asarray(Cm.data) - A_masked @ B)))
+out["occupancy"] = Am.occupancy
+
+# 2.5D on (2, 4, 4): pod axis as the replication stack
+mesh3 = jax.make_mesh((2, 4, 4), ("pod", "data", "model"), axis_types=(AxisType.Auto,)*3)
+grid3 = GridSpec("data", "model", stack_axis="pod")
+sh3 = NamedSharding(mesh3, P("data", "model"))
+A4d, B4d = jax.device_put(A, sh3), jax.device_put(B, sh3)
+out["cannon25d_ar"] = err(jax.jit(lambda a, b: cannon25d_matmul(
+    a, b, mesh=mesh3, grid=grid3))(A4d, B4d))
+out["cannon25d_rs"] = err(jax.jit(lambda a, b: cannon25d_matmul(
+    a, b, mesh=mesh3, grid=grid3, reduce="reduce_scatter"))(A4d, B4d))
+out["auto_25d"] = err(distributed_matmul(A4d, B4d, mesh=mesh3, grid=grid3,
+                                         algorithm="cannon25d"))
+
+print("JSON" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def battery_results():
+    stdout = run_subprocess_devices(BATTERY, n_devices=32, timeout=900)
+    line = [l for l in stdout.splitlines() if l.startswith("JSON")][-1]
+    return json.loads(line[4:])
+
+
+TOL = 2e-4
+
+
+@pytest.mark.parametrize("key", [
+    "cannon", "cannon_rolled", "summa_psum", "summa_gather", "auto_square",
+    "blocked_ref", "blocked_smm", "ts_k_all_reduce", "ts_k_reduce_scatter",
+    "ts_m", "sparse_api", "cannon25d_ar", "cannon25d_rs", "auto_25d",
+])
+def test_distributed_correctness(battery_results, key):
+    assert battery_results[key] < TOL, (key, battery_results[key])
+
+
+def test_sparse_occupancy(battery_results):
+    # 4x8 mask with row 1 and col 3 cleared -> 21/32 blocks present
+    assert abs(battery_results["occupancy"] - 21 / 32) < 1e-9

@@ -1,0 +1,192 @@
+"""Hypothesis property tests on the distributed-engine invariants that
+hold independent of device count (host-side: permutation algebra, spec
+resolution, padding rules) plus HLO-analyzer parser regressions."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from jax.sharding import PartitionSpec as P
+
+from repro.core.cannon import _skew_perm, _shift_perm
+from repro.core.cannon25d import _skew25d_perm
+from repro.kernels.smm.ops import mxu_pad_shape
+from repro.launch import hlo_analysis as H
+
+
+# ---------------------------------------------------------------------------
+# permutation algebra (a wrong perm deadlocks or corrupts a real run —
+# these invariants are the cheap static guarantee)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(2, 8), st.sampled_from(["a", "b"]))
+@settings(max_examples=30, deadline=None)
+def test_skew_perm_is_bijection(pg, which):
+    pairs = _skew_perm(pg, which)
+    srcs = [s for s, _ in pairs]
+    dsts = [d for _, d in pairs]
+    assert sorted(srcs) == list(range(pg * pg))
+    assert sorted(dsts) == list(range(pg * pg))
+
+
+@given(st.integers(2, 8))
+@settings(max_examples=20, deadline=None)
+def test_skew_perm_row_preserving(pg):
+    # A's skew moves data only within its grid row
+    for s, d in _skew_perm(pg, "a"):
+        assert s // pg == d // pg
+    # B's skew moves data only within its grid column
+    for s, d in _skew_perm(pg, "b"):
+        assert s % pg == d % pg
+
+
+@given(st.integers(2, 8))
+@settings(max_examples=20, deadline=None)
+def test_shift_perm_order(pg):
+    """Applying the circular shift pg times is the identity."""
+    perm = dict(_shift_perm(pg))
+    for start in range(pg):
+        x = start
+        for _ in range(pg):
+            x = perm[x]
+        assert x == start
+
+
+@given(st.sampled_from([(2, 1), (2, 2), (4, 2), (4, 4), (6, 2), (6, 3),
+                        (8, 2), (8, 4)]),
+       st.sampled_from(["a", "b"]))
+@settings(max_examples=30, deadline=None)
+def test_skew25d_perm_is_pod_local_bijection(pgc, which):
+    pg, c = pgc
+    spr = pg // c
+    pairs = _skew25d_perm(pg, c, spr, which)
+    n = c * pg * pg
+    assert sorted(s for s, _ in pairs) == list(range(n))
+    assert sorted(d for _, d in pairs) == list(range(n))
+    # replicas never exchange data during the skew
+    for s, d in pairs:
+        assert s // (pg * pg) == d // (pg * pg)
+
+
+def test_skew25d_phase_offsets():
+    """Replica p must start at k-phase (i + j + p*spr) mod P."""
+    pg, c = 4, 2
+    spr = pg // c
+    pairs = dict()
+    for s, d in _skew25d_perm(pg, c, spr, "a"):
+        pairs[d] = s
+    for p in range(c):
+        for i in range(pg):
+            for j in range(pg):
+                dst = (p * pg + i) * pg + j
+                src = pairs[dst]
+                src_j = src % pg
+                assert src_j == (i + j + p * spr) % pg
+
+
+# ---------------------------------------------------------------------------
+# spec resolution / padding rules
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 512), st.integers(1, 512), st.integers(1, 512))
+@settings(max_examples=50, deadline=None)
+def test_mxu_pad_shape_properties(bm, bk, bn):
+    pm, pk, pn = mxu_pad_shape(bm, bk, bn, align=True)
+    assert pm % 8 == 0 and pk % 128 == 0 and pn % 128 == 0
+    assert pm >= bm and pk >= bk and pn >= bn
+    assert pm - bm < 8 and pk - bk < 128 and pn - bn < 128  # minimality
+    assert mxu_pad_shape(bm, bk, bn, align=False) == (bm, bk, bn)
+
+
+@given(st.integers(1, 64), st.integers(1, 16))
+@settings(max_examples=50, deadline=None)
+def test_head_pad_group_mapping_invariant(hkv, n_rep):
+    """head_pad_factor=c preserves the q-head -> kv-group map exactly."""
+    h = hkv * n_rep
+    for c in (2, 3, 4):
+        h_eff, hkv_eff = h * c, hkv * c
+        assert h_eff % hkv_eff == 0
+        n_rep_eff = h_eff // hkv_eff
+        assert n_rep_eff == n_rep           # grouping unchanged
+        for j in range(h):                  # every REAL head, same group
+            assert j // n_rep_eff == j // n_rep
+
+
+def test_resolve_spec_rules():
+    import types
+    from repro.models.common import resolve_spec
+    # resolve_spec only consults mesh.shape — no devices needed
+    mesh = types.SimpleNamespace(shape={"data": 2, "model": 4})
+    # non-divisible dim loses its axis
+    assert resolve_spec(P(None, "model", None), (8, 3, 4), mesh) \
+        == P(None, None, None)
+    # divisible dim keeps it
+    assert resolve_spec(P(None, "model"), (8, 8), mesh) == P(None, "model")
+    # absent axes are dropped ('pod' not in this mesh)
+    assert resolve_spec(P(("pod", "data"), None), (8, 8), mesh) \
+        == P("data", None)
+    # tuple axes: total extent must divide
+    assert resolve_spec(P(("data", "model"), None), (8, 8), mesh) \
+        == P(("data", "model"), None)
+    assert resolve_spec(P(("data", "model"), None), (4, 8), mesh) \
+        == P(None, None)
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer parser regressions
+# ---------------------------------------------------------------------------
+
+MINI_HLO = """HloModule test, num_partitions=4
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %dot.1 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups=[2,2]<=[4], to_apply=%add
+  %t = (s32[], f32[8,16]{1,0}) tuple(%i, %ar)
+  ROOT %r = (s32[], f32[8,16]{1,0}) copy(%t)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[8,16]) -> f32[8,16] {
+  %x = f32[8,16]{1,0} parameter(0)
+  %init = (s32[], f32[8,16]{1,0}) tuple(%x)
+  %wh = (s32[], f32[8,16]{1,0}) while(%init), condition=%cond, body=%body
+  ROOT %o = f32[8,16]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+
+
+def test_analyzer_trip_count_and_flops():
+    costs = H.analyze_hlo(MINI_HLO)
+    # dot: 2*8*16*16 = 4096 flops, x5 trips
+    assert costs.flops == 5 * 2 * 8 * 16 * 16
+    # all-reduce: 8*16*4B payload, group size 2 -> 2*(1/2)*512 = 512 B, x5
+    assert costs.collective_bytes["all-reduce"] == 5 * 512.0
+    assert costs.unknown_trip_loops == 0
+
+
+def test_analyzer_shape_parsing():
+    assert H._nbytes("f32[8,16]{1,0}") == 512
+    assert H._nbytes("(s32[], bf16[4,4]{1,0})") == 4 + 32
+    assert H._nbytes("pred[]") == 1
+    name, type_str, opcode, rest = H._parse_op_line(
+        "  %wh = (s32[], f32[8,16]{1,0}, /*index=2*/f32[2]{0}) "
+        "while(%init), condition=%c, body=%b")
+    assert opcode == "while"
+    assert H._attr(rest, "body") == "b"
