@@ -18,8 +18,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.blocking import BlockLayout
+from repro.core.engine import execute_plans_looped
 from repro.core.stacks import build_stacks, stack_statistics
-from repro.core.densify import (blocked_local_matmul, densified_local_matmul)
+from repro.core.densify import (blocked_local_matmul, densified_local_matmul,
+                                from_blocks, to_blocks)
 
 
 def time_call(fn, *args, reps=3):
@@ -33,23 +35,40 @@ def time_call(fn, *args, reps=3):
 def bench_case(name, m, k, n, block, rng, results):
     a = jnp.asarray(rng.randn(m, k).astype(np.float32))
     b = jnp.asarray(rng.randn(k, n).astype(np.float32))
-    blocked = jax.jit(blocked_local_matmul(
+    blocked_fn = blocked_local_matmul(
         m, k, n, block_m=block, block_k=block, block_n=block,
-        kernel="ref"))
+        kernel="ref")
+    blocked = jax.jit(blocked_fn)
     densified = jax.jit(densified_local_matmul())
-    stats = stack_statistics(build_stacks(
-        BlockLayout(m, k, block, block), BlockLayout(k, n, block, block)))
+    plan = blocked_fn.executor_plan
+    stats = stack_statistics(list(plan.plans), stack_tile=plan.stack_tile)
+
+    # before/after stack dispatch: the seed's per-plan jit loop vs the
+    # fused scan executor the blocked path now uses
+    def looped(a, b):
+        ab = to_blocks(a, block, block)
+        bb = to_blocks(b, block, block)
+        c0 = jnp.zeros((plan.nbr * plan.nbc, block, block), jnp.float32)
+        c = execute_plans_looped(list(plan.plans), ab, bb, c0, kernel="ref")
+        return from_blocks(c, plan.nbr, plan.nbc)
+
     t_b = time_call(blocked, a, b)
+    t_loop = time_call(jax.jit(looped), a, b)
     t_d = time_call(densified, a, b)
     err = float(jnp.max(jnp.abs(blocked(a, b) - densified(a, b))))
     rec = {"case": name, "m": m, "k": k, "n": n, "block": block,
-           "t_blocked_s": t_b, "t_densified_s": t_d,
-           "ratio": t_b / t_d, "n_stack_entries": stats["n_multiplications"],
+           "t_blocked_s": t_b, "t_blocked_looped_s": t_loop,
+           "t_densified_s": t_d,
+           "ratio": t_b / t_d, "dispatch_speedup": t_loop / t_b,
+           "n_stacks": stats["n_stacks"],
+           "n_stack_entries": stats["n_multiplications"],
+           "stack_fill": stats.get("fill", 1.0),
            "max_err": err}
     results.append(rec)
     print(f"{name:12s} block={block:3d}  T_blocked/T_densified = "
-          f"{t_b/t_d:6.2f}x   ({stats['n_multiplications']} stack entries, "
-          f"err {err:.1e})")
+          f"{t_b/t_d:6.2f}x   looped/fused = {t_loop/t_b:5.2f}x   "
+          f"({stats['n_multiplications']} stack entries in "
+          f"{stats['n_stacks']} stacks, err {err:.1e})")
 
 
 def main(out="artifacts/bench"):

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.blocking import BlockLayout
+from repro.core.engine import (build_executor_plan, execute_plan,
+                               execute_plans_looped)
 from repro.core.stacks import build_stacks
 from repro.core.densify import to_blocks
 from repro.kernels.smm.ref import smm_process_stack_ref
@@ -52,6 +54,43 @@ def main(out="artifacts/bench"):
                         "stack_entries": int(triples.shape[0])})
         print(f"smm  block={block:3d}: {dt*1e3:8.2f} ms  "
               f"{flops/dt/1e9:7.2f} GF/s  ({triples.shape[0]} entries)")
+
+    # fused vs looped stack dispatch: the engine's single-scan executor
+    # against the seed's one-jit-call-per-stack loop (same math, same
+    # stacks; the delta is dispatch + per-stack retrace overhead)
+    for block in (22, 64):
+        m = k = n = 704
+        a = jnp.asarray(rng.randn(m, k).astype(np.float32))
+        b = jnp.asarray(rng.randn(k, n).astype(np.float32))
+        ab = to_blocks(a, block, block)
+        bb = to_blocks(b, block, block)
+        nbr = nbc = m // block
+        nbk = k // block
+        # force a multi-stack plan (8-ish stacks) so dispatch count matters
+        stack_tile = max(nbk, (nbr * nbc * nbk) // 8 // nbk * nbk)
+        plan = build_executor_plan(m, k, n, block, block, block, stack_tile)
+        c0 = jnp.zeros((nbr * nbc, block, block), jnp.float32)
+
+        fused = jax.jit(lambda ab, bb, c0, plan=plan: execute_plan(
+            plan, ab, bb, c0, kernel="ref"))
+        t_fused = time_call(fused, ab, bb, c0)
+
+        def looped(ab, bb, c0, plans=list(plan.plans)):
+            return execute_plans_looped(plans, ab, bb, c0, kernel="ref")
+
+        t_looped = time_call(jax.jit(looped), ab, bb, c0)
+        flops = 2 * m * k * n
+        results.append({
+            "kernel": "smm_dispatch", "block": block,
+            "n_stacks": plan.n_stacks, "stack_tile": plan.stack_tile,
+            "t_fused_s": t_fused, "t_looped_s": t_looped,
+            "fused_gflops": flops / t_fused / 1e9,
+            "looped_gflops": flops / t_looped / 1e9,
+            "looped_over_fused": t_looped / t_fused,
+        })
+        print(f"smm dispatch block={block:3d} ({plan.n_stacks} stacks): "
+              f"fused {t_fused*1e3:8.2f} ms  looped {t_looped*1e3:8.2f} ms  "
+              f"(looped/fused = {t_looped/t_fused:.2f}x)")
 
     # tiled matmul vs XLA dot
     m = k = n = 1024

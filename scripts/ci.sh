@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 gate (ROADMAP.md): the full suite must COLLECT cleanly and pass.
+# Collection failures (missing optional deps, moved jax APIs) broke the
+# seed suite once — this script exists so they can't land again.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# collection must produce zero errors even where optional deps are absent
+python -m pytest -q --collect-only >/dev/null
+
+python -m pytest -x -q

@@ -10,11 +10,14 @@ from .cannon25d import cannon25d_matmul
 from .tall_skinny import tall_skinny_matmul, classify_shape
 from .summa import summa_matmul
 from .densify import densify, undensify, to_blocks, from_blocks
-from .stacks import build_stacks, StackPlan, STACK_SIZE
+from .engine import (ExecutorPlan, build_executor_plan, execute_plan,
+                     stack_executor)
+from .stacks import build_stacks, pad_plans, StackPlan, STACK_SIZE
 
 __all__ = [
     "BlockLayout", "GridSpec", "distributed_matmul", "cannon_matmul",
     "cannon25d_matmul", "tall_skinny_matmul", "classify_shape",
     "summa_matmul", "densify", "undensify", "to_blocks", "from_blocks",
-    "build_stacks", "StackPlan", "STACK_SIZE",
+    "build_stacks", "pad_plans", "StackPlan", "STACK_SIZE",
+    "ExecutorPlan", "build_executor_plan", "execute_plan", "stack_executor",
 ]

@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import pvary, shard_map
+
 from .blocking import GridSpec
 
 __all__ = ["cannon_matmul", "cannon_local_steps"]
@@ -113,7 +115,7 @@ def cannon_local_steps(
 
         # the zero-init accumulator must enter the loop already marked
         # varying over the grid axes (its per-step updates are)
-        c_blk = jax.lax.pvary(c_blk, (row_axis, col_axis))
+        c_blk = pvary(c_blk, (row_axis, col_axis))
         _, _, c_blk = jax.lax.fori_loop(0, n_steps, body, (a_blk, b_blk, c_blk))
     return c_blk
 
@@ -168,6 +170,6 @@ def cannon_matmul(
         return c.astype(out_dtype)
 
     spec = P(grid.row_axis, grid.col_axis)
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(spec, spec),
-                       out_specs=spec, check_vma=False)
+    fn = shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                   out_specs=spec, check_vma=False)
     return fn(a, b)

@@ -25,15 +25,10 @@ strategies consumed by cannon/summa/tall_skinny's ``local_matmul`` hook:
 """
 from __future__ import annotations
 
-import functools
-from typing import List, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-
-from .blocking import BlockLayout
-from .stacks import StackPlan, build_stacks, STACK_SIZE
 
 __all__ = [
     "to_blocks",
@@ -111,39 +106,23 @@ def blocked_local_matmul(
     block_m: int,
     block_k: int,
     block_n: int,
-    stack_size: int = STACK_SIZE,
+    stack_size: Optional[int] = None,
+    align: Optional[bool] = None,
     kernel: str = "smm",
 ):
     """Local multiply for the blocked path.
 
-    Builds the stack plans once (host-side, static) for the local
-    (m, k) x (k, n) multiply and returns a function  (a, b) -> c  that
-    runs every stack through the small-matrix-multiply kernel.
+    Delegates to the fused stack executor (core/engine.py): one memoized
+    plan build per geometry, one ``lax.scan`` over padded stacks, one
+    smm trace per block geometry.  ``stack_size`` / ``align`` default to
+    the autotune winners table for this block geometry.
 
     kernel='smm'  -> Pallas LIBCUSMM-analogue (interpret-mode on CPU)
     kernel='ref'  -> pure-jnp gather/segment-sum oracle (same math)
     """
-    a_layout = BlockLayout(m, k, block_m, block_k)
-    b_layout = BlockLayout(k, n, block_k, block_n)
-    plans: List[StackPlan] = build_stacks(a_layout, b_layout, stack_size)
-    nbr, nbk = a_layout.nblock_rows, a_layout.nblock_cols
-    nbc = b_layout.nblock_cols
+    from .engine import stack_executor
 
-    if kernel == "smm":
-        from repro.kernels.smm.ops import smm_process_stack as process
-    elif kernel == "ref":
-        from repro.kernels.smm.ref import smm_process_stack_ref as process
-    else:
-        raise ValueError(kernel)
-
-    def f(a: jax.Array, b: jax.Array) -> jax.Array:
-        a_blocks = to_blocks(a, block_m, block_k)
-        b_blocks = to_blocks(b, block_k, block_n)
-        c_blocks = jnp.zeros((nbr * nbc, block_m, block_n), jnp.float32)
-        for plan in plans:
-            triples = jnp.asarray(plan.triples)
-            c_blocks = process(a_blocks, b_blocks, c_blocks, triples)
-        return from_blocks(c_blocks, nbr, nbc)
-
-    f.plans = plans  # expose for benchmarks (stack statistics)
-    return f
+    return stack_executor(
+        m, k, n, block_m=block_m, block_k=block_k, block_n=block_n,
+        stack_size=stack_size, align=align, kernel=kernel,
+    )

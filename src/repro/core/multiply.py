@@ -35,6 +35,8 @@ def distributed_matmul(
     block_m: int = 64,
     block_k: int = 64,
     block_n: int = 64,
+    stack_size: Optional[int] = None,
+    align: Optional[bool] = None,
     local_kernel: Optional[str] = None,
     precision=jax.lax.Precision.DEFAULT,
     double_buffer: bool = True,
@@ -47,6 +49,9 @@ def distributed_matmul(
       cannon25d    — 2.5D Cannon over grid.stack_axis
       ts_k|ts_m|ts_n — tall-and-skinny variants
       summa        — the ScaLAPACK-PDGEMM-style baseline
+
+    For the blocked path (``densify=False``) ``stack_size``/``align``
+    default to the smm autotune winners table for the block geometry.
     """
     m, k = a.shape
     k2, n = b.shape
@@ -57,6 +62,9 @@ def distributed_matmul(
         algorithm = classify_shape(m, k, n)
         if algorithm == "cannon" and grid.stack_axis is not None:
             algorithm = "cannon25d"
+    if algorithm not in ("cannon", "cannon25d", "ts_k", "ts_m", "ts_n",
+                        "summa"):
+        raise ValueError(f"unknown algorithm {algorithm!r}")
 
     # ---- local multiply strategy (densified vs blocked) --------------
     if densify:
@@ -71,10 +79,38 @@ def distributed_matmul(
                 "ts_n": (m, k, n // p_all),
             }
             ml, kl, nl = shapes[algorithm]
+        elif algorithm in ("cannon", "cannon25d"):
+            # Local multiply is (m/pg, k/pg) @ (k/pg, n/pg) on the square
+            # grid Cannon requires.  Deriving the inner dim from pc alone
+            # (the old ``k // pc``) silently mis-sized B's stack-plan
+            # geometry whenever pr != pc: gathers clamp out-of-range
+            # block indices instead of failing, producing wrong C.
+            pg = grid.validate_square(mesh)
+            if m % pg or k % pg or n % pg:
+                raise ValueError(
+                    f"shape ({m},{k},{n}) not divisible by grid side {pg}")
+            ml, kl, nl = m // pg, k // pg, n // pg
         else:
-            ml, kl, nl = m // pr, k // pc, n // pc
+            # summa hands the full local operands to the local multiply
+            # only on square grids (otherwise panels are strict slices of
+            # the local K extent and a fixed stack plan cannot describe
+            # them).
+            if pr != pc:
+                raise ValueError(
+                    f"blocked local multiply requires a square grid for "
+                    f"{algorithm!r}; got {pr}x{pc} (use densify=True)")
+            if m % pr or k % pc or n % pc:
+                raise ValueError(
+                    f"shape ({m},{k},{n}) not divisible by grid {pr}x{pc}")
+            if kw.get("bcast") == "gather":
+                # PUMMA-style broadcast: the local multiply sees the
+                # all-gathered full-K row of A / column of B
+                ml, kl, nl = m // pr, k, n // pc
+            else:
+                ml, kl, nl = m // pr, k // pc, n // pc
         lm = blocked_local_matmul(
             ml, kl, nl, block_m=block_m, block_k=block_k, block_n=block_n,
+            stack_size=stack_size, align=align,
             kernel=local_kernel or "smm",
         )
 

@@ -23,7 +23,8 @@ from .blocking import BlockLayout, morton_order
 
 STACK_SIZE = 30_000  # paper: "each batch consists of maximum 30'000"
 
-__all__ = ["StackPlan", "build_stacks", "STACK_SIZE"]
+__all__ = ["StackPlan", "build_stacks", "pad_plans", "stack_statistics",
+           "STACK_SIZE"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,12 +106,59 @@ def build_stacks(
     return plans
 
 
-def stack_statistics(plans: List[StackPlan]) -> dict:
-    """Summary used by benchmarks (paper quotes stack counts directly)."""
+def pad_plans(
+    plans: List[StackPlan],
+    stack_tile: int | None = None,
+    sentinel_c: int | None = None,
+) -> np.ndarray:
+    """Pad ragged stack plans into one ``(n_stacks, stack_tile, 4)`` tensor.
+
+    The fused executor (core/engine.py) runs all stacks through a single
+    ``lax.scan``, which needs every stack to have the same static length.
+    Output columns are ``(a_idx, b_idx, c_idx, valid)``; padding rows
+    carry ``(0, 0, sentinel_c, 0)``:
+
+      * ``valid == 0`` lets the kernel zero the padding entry's product,
+      * ``c_idx == sentinel_c`` (default: one past the last real C block,
+        the executor appends a scratch block there) keeps the padding
+        writes off the real C blocks AND preserves the run-contiguity
+        invariant inside every padded stack — the padding rows form one
+        trailing run of their own.
+    """
+    if not plans:
+        raise ValueError("no stack plans to pad")
+    n_c = plans[0].n_c_blocks
+    sentinel = n_c if sentinel_c is None else sentinel_c
+    tile = max(p.size for p in plans) if stack_tile is None else stack_tile
+    out = np.zeros((len(plans), tile, 4), dtype=np.int32)
+    out[:, :, 2] = sentinel
+    for i, p in enumerate(plans):
+        if p.size > tile:
+            raise ValueError(f"plan of size {p.size} exceeds stack_tile {tile}")
+        out[i, : p.size, :3] = p.triples
+        out[i, : p.size, 3] = 1
+    return out
+
+
+def stack_statistics(plans: List[StackPlan],
+                     stack_tile: int | None = None) -> dict:
+    """Summary used by benchmarks (paper quotes stack counts directly).
+
+    With ``stack_tile`` given, also reports the padding the fused
+    executor introduces (mask fill ratio of the padded stack tensor).
+    """
     sizes = [p.size for p in plans]
-    return {
+    stats = {
         "n_stacks": len(plans),
         "n_multiplications": int(np.sum(sizes)),
         "max_stack": int(np.max(sizes)) if sizes else 0,
         "flops": int(np.sum([p.flops() for p in plans])),
     }
+    if stack_tile is None and sizes:
+        stack_tile = stats["max_stack"]
+    if stack_tile:
+        padded_total = len(plans) * stack_tile
+        stats["stack_tile"] = stack_tile
+        stats["n_padding"] = padded_total - stats["n_multiplications"]
+        stats["fill"] = stats["n_multiplications"] / padded_total
+    return stats

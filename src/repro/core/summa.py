@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 from .blocking import GridSpec
 from .cannon import _default_local_matmul
 
@@ -61,7 +63,7 @@ def summa_matmul(
             return lm(a_row, b_col).astype(out_dtype)
 
         spec = P(row_ax, col_ax)
-        fn = jax.shard_map(
+        fn = shard_map(
             body_gather, mesh=mesh, in_specs=(spec, spec), out_specs=spec,
             check_vma=False,
         )
@@ -103,6 +105,6 @@ def summa_matmul(
         return c.astype(out_dtype)
 
     spec = P(row_ax, col_ax)
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(spec, spec),
-                       out_specs=spec, check_vma=False)
+    fn = shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                   out_specs=spec, check_vma=False)
     return fn(a, b)

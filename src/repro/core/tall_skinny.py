@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 from .blocking import GridSpec
 from .cannon import _default_local_matmul
 
@@ -80,7 +82,7 @@ def tall_skinny_matmul(
         def body_m(a_blk, b_full):
             return lm(a_blk, b_full).astype(out_dtype)
 
-        fn = jax.shard_map(
+        fn = shard_map(
             body_m, mesh=mesh,
             in_specs=(P(axes, None), P(None, None)),
             out_specs=P(axes, None), check_vma=False,
@@ -91,7 +93,7 @@ def tall_skinny_matmul(
         def body_n(a_full, b_blk):
             return lm(a_full, b_blk).astype(out_dtype)
 
-        fn = jax.shard_map(
+        fn = shard_map(
             body_n, mesh=mesh,
             in_specs=(P(None, None), P(None, axes)),
             out_specs=P(None, axes), check_vma=False,
@@ -114,7 +116,7 @@ def tall_skinny_matmul(
         return c.astype(out_dtype)
 
     out_spec = P(None, None) if reduce == "all_reduce" else P(axes, None)
-    fn = jax.shard_map(
+    fn = shard_map(
         body_k, mesh=mesh,
         in_specs=(P(None, axes), P(axes, None)),
         out_specs=out_spec, check_vma=False,

@@ -27,11 +27,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.blocking import BlockLayout
-from repro.core.stacks import build_stacks
 from repro.core.densify import to_blocks
-from .ops import smm_process_stack
-from .ref import smm_process_stack_ref
+from repro.core.engine import build_executor_plan, execute_plan
+from .ops import mxu_pad_shape
 
 DEFAULT_CACHE = os.path.join("artifacts", "smm_autotune.json")
 
@@ -60,34 +58,32 @@ def tune_block(block: int, *, n_blocks: int = 8,
     a_blocks = to_blocks(a, block, block)
     b_blocks = to_blocks(b, block, block)
 
+    # the sweep measures the SAME dispatch path production uses: the
+    # fused scan executor (core/engine.py), per (align, stack_tile)
+    kernel = "smm" if use_kernel else "ref"
+    if use_kernel:
+        space = SPACE
+    else:
+        # the ref oracle ignores align — sweeping it would record a
+        # coin-flip align bit into the winners table; pin it from the
+        # MXU-padding heuristic and sweep stack_tile only
+        heur_align = mxu_pad_shape(block, block, block, True) != \
+            (block, block, block)
+        space = [(heur_align, t) for t in sorted({t for _, t in SPACE})]
     rows = []
-    for align, stack_tile in SPACE:
-        plans = build_stacks(BlockLayout(m, k, block, block),
-                             BlockLayout(k, n, block, block),
-                             stack_size=stack_tile)
+    for align, stack_tile in space:
+        plan = build_executor_plan(m, k, n, block, block, block, stack_tile)
         c = jnp.zeros((n_blocks * n_blocks, block, block), jnp.float32)
 
-        if use_kernel:  # interpret-mode Pallas (slow on CPU, true on TPU)
-            def run(c0=c, plans=plans, align=align):
-                out = c0
-                for p in plans:
-                    out = smm_process_stack(a_blocks, b_blocks, out,
-                                            jnp.asarray(p.triples),
-                                            align=align)
-                return out
-        else:           # jnp oracle path (CPU-meaningful proxy)
-            def run(c0=c, plans=plans):
-                out = c0
-                for p in plans:
-                    out = smm_process_stack_ref(a_blocks, b_blocks, out,
-                                                jnp.asarray(p.triples))
-                return out
+        def run(c0=c, plan=plan, align=align):
+            return execute_plan(plan, a_blocks, b_blocks, c0,
+                                kernel=kernel, align=align)
 
         dt = _bench(jax.jit(run))
         flops = 2 * m * k * n
         rows.append({"align": align, "stack_tile": stack_tile,
                      "time_s": dt, "gflops": flops / dt / 1e9,
-                     "n_stacks": len(plans)})
+                     "n_stacks": plan.n_stacks})
     best = min(rows, key=lambda r: r["time_s"])
     return {"block": block, "rows": rows, "best": best}
 
@@ -106,6 +102,23 @@ def best_params(block: int, path: str = DEFAULT_CACHE) -> Tuple[bool, int]:
     if entry:
         return entry["best"]["align"], entry["best"]["stack_tile"]
     return (block % 8 != 0 or block % 128 != 0), 30000
+
+
+def best_params_for(block_m: int, block_k: int, block_n: int,
+                    path: str = DEFAULT_CACHE) -> Tuple[bool, int]:
+    """Winner lookup for a (possibly non-uniform) block geometry — the
+    dispatch-path entry point (core/engine.py resolves ``align`` /
+    ``stack_tile`` through this when the caller doesn't pin them).
+
+    The winners table is keyed on uniform block sizes (the paper's
+    regime); non-uniform geometries fall back to the heuristic: align
+    iff MXU padding would change the block shape.
+    """
+    if block_m == block_k == block_n:
+        return best_params(block_m, path)
+    align = mxu_pad_shape(block_m, block_k, block_n, True) != \
+        (block_m, block_k, block_n)
+    return align, 30000
 
 
 def main():

@@ -46,7 +46,14 @@ def smm_process_stack(
     align: bool = False,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """C[c] += A[a] @ B[b] over a stack; returns updated C blocks."""
+    """C[c] += A[a] @ B[b] over a stack; returns updated C blocks.
+
+    ``triples`` is (S, 3) or (S, 4) int32 — the optional 4th column is
+    the validity mask of the fused executor's padded stacks (see
+    smm.py); masked entries accumulate nothing.
+    """
+    if triples.ndim != 2 or triples.shape[1] not in (3, 4):
+        raise ValueError(f"triples must be (S, 3|4), got {triples.shape}")
     if interpret is None:
         interpret = _on_cpu()
     _, bm, bk = a_blocks.shape

@@ -11,14 +11,18 @@ def smm_process_stack_ref(
     a_blocks: jax.Array,  # (Na, bm, bk)
     b_blocks: jax.Array,  # (Nb, bk, bn)
     c_blocks: jax.Array,  # (Nc, bm, bn) float32 accumulator
-    triples: jax.Array,   # (S, 3) int32: (a_idx, b_idx, c_idx)
+    triples: jax.Array,   # (S, 3|4) int32: (a_idx, b_idx, c_idx[, valid])
 ) -> jax.Array:
     """C[c] += A[a] @ B[b] for every stack entry — gather / batched
-    matmul / scatter-add formulation."""
+    matmul / scatter-add formulation.  An optional 4th triples column is
+    a validity mask (the fused executor's stack padding): masked entries
+    contribute zero."""
     a = a_blocks[triples[:, 0]]
     b = b_blocks[triples[:, 1]]
     prod = jnp.einsum(
         "smk,skn->smn", a.astype(jnp.float32), b.astype(jnp.float32),
         preferred_element_type=jnp.float32,
     )
+    if triples.shape[1] > 3:
+        prod = prod * triples[:, 3].astype(jnp.float32)[:, None, None]
     return c_blocks.at[triples[:, 2]].add(prod)

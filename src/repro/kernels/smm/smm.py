@@ -16,6 +16,12 @@ grid step touches.  That requires scalar prefetch
 (pltpu.PrefetchScalarGridSpec) so the index_map can read them before
 the DMA of the corresponding blocks is issued.
 
+Triples may carry an optional 4th column (validity mask).  The fused
+stack executor (core/engine.py) pads ragged stacks to a uniform tile;
+padding rows have mask 0 and point ``c_idx`` at a scratch block one
+past the real C blocks, so their (zeroed) products never touch real
+output.
+
 Accumulation correctness relies on the stack invariant established by
 stacks.py: entries with equal c_idx are contiguous, so each C block is
 resident in VMEM for exactly one run of consecutive grid steps (the
@@ -44,6 +50,11 @@ def _smm_kernel(triples_ref, a_ref, b_ref, c_in_ref, c_out_ref):
         b_ref[0].astype(jnp.float32),
         preferred_element_type=jnp.float32,
     )
+    if triples_ref.shape[1] > 3:
+        # masked triples (fused-executor stack padding): column 3 is a
+        # validity flag — zero the padding entries' product so their
+        # accumulation into the scratch C block is a no-op.
+        prod = prod * triples_ref[s, 3].astype(jnp.float32)
 
     @pl.when(jnp.logical_not(prev_same))
     def _init():  # start of run: seed with the incoming C block

@@ -16,8 +16,7 @@ module does not touch jax device state.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh as _make_mesh_compat
 
 __all__ = ["make_production_mesh", "make_mesh", "HW"]
 
@@ -34,11 +33,11 @@ HW = {
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh_compat(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh with Auto axis types (tests, reduced configs)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh_compat(tuple(shape), tuple(axes),
+                             axis_types=(AxisType.Auto,) * len(axes))

@@ -3,6 +3,9 @@ densify/undensify round trips — plus hypothesis property tests on the
 system's invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (see requirements.txt)")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -15,8 +15,9 @@ from conftest import run_subprocess_devices
 BATTERY = r"""
 import json
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import make_mesh
 from repro.core.blocking import GridSpec
 from repro.core.cannon import cannon_matmul
 from repro.core.cannon25d import cannon25d_matmul
@@ -28,7 +29,7 @@ from repro.core import dbcsr
 rng = np.random.RandomState(0)
 out = {}
 
-mesh = jax.make_mesh((4, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((4, 4), ("data", "model"))
 grid = GridSpec("data", "model")
 M, K, N = 128, 256, 192
 A = rng.randn(M, K).astype(np.float32)
@@ -82,7 +83,7 @@ out["sparse_api"] = float(np.max(np.abs(np.asarray(Cm.data) - A_masked @ B)))
 out["occupancy"] = Am.occupancy
 
 # 2.5D on (2, 4, 4): pod axis as the replication stack
-mesh3 = jax.make_mesh((2, 4, 4), ("pod", "data", "model"), axis_types=(AxisType.Auto,)*3)
+mesh3 = make_mesh((2, 4, 4), ("pod", "data", "model"))
 grid3 = GridSpec("data", "model", stack_axis="pod")
 sh3 = NamedSharding(mesh3, P("data", "model"))
 A4d, B4d = jax.device_put(A, sh3), jax.device_put(B, sh3)

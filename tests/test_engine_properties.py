@@ -3,6 +3,9 @@ hold independent of device count (host-side: permutation algebra, spec
 resolution, padding rules) plus HLO-analyzer parser regressions."""
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (see requirements.txt)")
 from hypothesis import given, settings, strategies as st
 
 from jax.sharding import PartitionSpec as P
