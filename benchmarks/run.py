@@ -16,6 +16,7 @@ BENCHES = [
     ("kernels (smm / dense / grouped)", "benchmarks.bench_kernels"),
     ("IV-A grid configuration", "benchmarks.bench_grid_config"),
     ("IV-B blocked vs densified", "benchmarks.bench_densify"),
+    ("block-sparse occupancy sweep", "benchmarks.bench_sparse"),
     ("IV-C DBCSR vs PDGEMM(SUMMA)", "benchmarks.bench_vs_pgemm"),
     ("2.5D Cannon (pod-axis, beyond-paper)", "benchmarks.bench_25d"),
     ("roofline summary (from dry-run artifacts)", "benchmarks.bench_roofline"),

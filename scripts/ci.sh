@@ -11,3 +11,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -q --collect-only >/dev/null
 
 python -m pytest -x -q
+
+# occupancy-aware stacks: the sparse dispatch win is tracked in the
+# bench trajectory (artifacts/bench/sparse_smoke.json) and gated —
+# --check fails the build if dispatch time stops falling with occupancy
+python benchmarks/bench_sparse.py --smoke --check

@@ -77,6 +77,13 @@ def cannon_local_steps(
 
     ``steps``/``step_offset`` support the 2.5D variant (cannon25d.py)
     where each replica executes a strided/offset subset of the shifts.
+
+    ``local_matmul`` may be *stepwise* (``local_matmul.stepwise`` is
+    truthy): it is then called as ``local_matmul(a, b, step=t)`` with
+    the 0-based shift index, and may return ``None`` to signal that the
+    step's occupancy-mask product is empty on every rank — the partial
+    accumulation is skipped (host-static and uniform across devices, so
+    SPMD-safe; the shifts themselves still run, later steps need them).
     """
     if skew:
         a_blk = jax.lax.ppermute(a_blk, (row_axis, col_axis), _skew_perm(pg, "a"))
@@ -92,15 +99,22 @@ def cannon_local_steps(
     c_blk = jnp.zeros((a_blk.shape[0], b_blk.shape[1]), dtype=out_dtype)
     shift_a = _shift_perm(pg)
     shift_b = _shift_perm(pg)
+    stepwise = bool(getattr(local_matmul, "stepwise", False))
 
-    if double_buffer:
+    if double_buffer or stepwise:
         # Unrolled: issue step t+1's permutes before step t's dot so XLA
-        # overlaps collective-permute with the local matmul.
+        # overlaps collective-permute with the local matmul.  Stepwise
+        # (occupancy-masked) local multiplies force this form: per-step
+        # plans are distinct host constants the rolled fori_loop body
+        # cannot express.
         for t in range(n_steps):
             if t < n_steps - 1:
                 a_nxt = jax.lax.ppermute(a_blk, col_axis, shift_a)
                 b_nxt = jax.lax.ppermute(b_blk, row_axis, shift_b)
-            c_blk = c_blk + local_matmul(a_blk, b_blk).astype(out_dtype)
+            part = (local_matmul(a_blk, b_blk, step=t) if stepwise
+                    else local_matmul(a_blk, b_blk))
+            if part is not None:
+                c_blk = c_blk + part.astype(out_dtype)
             if t < n_steps - 1:
                 a_blk, b_blk = a_nxt, b_nxt
     else:

@@ -47,18 +47,21 @@ class DBCSRMatrix:
 
     # -- pytree protocol (data is a leaf; the rest is static) ----------
     def tree_flatten(self):
-        return (self.data,), (self.layout, self.grid,
-                              None if self.block_mask is None
-                              else self.block_mask.tobytes()
-                              + self.block_mask.shape.__repr__().encode())
+        # the mask rides in aux as (shape, bytes): hashable (jit cache
+        # key) AND sufficient to reconstruct the array on unflatten, so
+        # block sparsity survives jit/vmap/scan round-trips.
+        mask_aux = (None if self.block_mask is None
+                    else (self.block_mask.shape, self.block_mask.tobytes()))
+        return (self.data,), (self.layout, self.grid, mask_aux)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        layout, grid, _mask = aux
-        # mask bytes are only for hashability; rebuild lazily as None --
-        # multiply() re-derives occupancy from the stored attribute when
-        # called outside of transformations.
-        return cls(children[0], layout, grid, None)
+        layout, grid, mask_aux = aux
+        mask = None
+        if mask_aux is not None:
+            shape, raw = mask_aux
+            mask = np.frombuffer(raw, dtype=bool).reshape(shape).copy()
+        return cls(children[0], layout, grid, mask)
 
     # -- DBCSR-like API -------------------------------------------------
     @property
@@ -111,6 +114,14 @@ def create(
 
 
 def add(a: DBCSRMatrix, b: DBCSRMatrix) -> DBCSRMatrix:
+    """C = A + B.  Result occupancy is the union of the operands'.
+
+    A missing mask means *dense* (every block present), so when exactly
+    one operand carries a mask the union with the dense operand is
+    dense and the result mask is deliberately ``None`` — not a dropped
+    mask, but the correct all-present occupancy (contrast multiply(),
+    where a one-sided mask does constrain the product's support).
+    """
     mask = None
     if a.block_mask is not None and b.block_mask is not None:
         mask = a.block_mask | b.block_mask
@@ -144,18 +155,32 @@ def multiply(
     **kw,
 ) -> DBCSRMatrix:
     """C = A @ B — dispatches to the data-exchange algorithm (see
-    multiply.py for the dispatch rules)."""
+    multiply.py for the dispatch rules).
+
+    Block occupancy flows end to end: the operands' masks are handed to
+    the distributed dispatcher (the blocked path plans only present
+    triples and skips empty shift/panel steps), and the result carries
+    the symbolic product mask ``(a_mask @ b_mask) > 0`` — with a missing
+    operand mask treated as all-present, so a single masked operand
+    still constrains the product's support.
+    """
     from .multiply import distributed_matmul
 
     c_data = distributed_matmul(
         a.data, b.data, mesh=mesh, grid=a.grid,
         algorithm=algorithm, densify=densify,
         block_m=a.layout.block_rows, block_k=a.layout.block_cols,
-        block_n=b.layout.block_cols, **kw,
+        block_n=b.layout.block_cols,
+        a_mask=a.block_mask, b_mask=b.block_mask, **kw,
     )
     c_layout = BlockLayout(a.layout.rows, b.layout.cols,
                            a.layout.block_rows, b.layout.block_cols)
     mask = None
-    if a.block_mask is not None and b.block_mask is not None:
-        mask = (a.block_mask.astype(np.int64) @ b.block_mask.astype(np.int64)) > 0
+    if a.block_mask is not None or b.block_mask is not None:
+        from .stacks import normalize_block_masks
+
+        am, bm = normalize_block_masks(
+            a.layout.nblock_rows, a.layout.nblock_cols,
+            b.layout.nblock_cols, a.block_mask, b.block_mask)
+        mask = (am.astype(np.int64) @ bm.astype(np.int64)) > 0
     return DBCSRMatrix(c_data, c_layout, a.grid, mask)

@@ -109,13 +109,20 @@ def blocked_local_matmul(
     stack_size: Optional[int] = None,
     align: Optional[bool] = None,
     kernel: str = "smm",
+    a_mask=None,
+    b_mask=None,
+    pair_mask=None,
 ):
     """Local multiply for the blocked path.
 
     Delegates to the fused stack executor (core/engine.py): one memoized
-    plan build per geometry, one ``lax.scan`` over padded stacks, one
-    smm trace per block geometry.  ``stack_size`` / ``align`` default to
-    the autotune winners table for this block geometry.
+    plan build per geometry (and per occupancy-mask fingerprint), one
+    ``lax.scan`` over padded stacks, one smm trace per block geometry.
+    ``stack_size`` / ``align`` default to the autotune winners table for
+    this block geometry and occupancy bin.  Occupancy masks
+    (``a_mask``/``b_mask``/``pair_mask``, host-side numpy bool) restrict
+    the plan to present triples — see the sparse planning contract in
+    core/engine.py.
 
     kernel='smm'  -> Pallas LIBCUSMM-analogue (interpret-mode on CPU)
     kernel='ref'  -> pure-jnp gather/segment-sum oracle (same math)
@@ -125,4 +132,5 @@ def blocked_local_matmul(
     return stack_executor(
         m, k, n, block_m=block_m, block_k=block_k, block_n=block_n,
         stack_size=stack_size, align=align, kernel=kernel,
+        a_mask=a_mask, b_mask=b_mask, pair_mask=pair_mask,
     )

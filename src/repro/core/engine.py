@@ -26,11 +26,40 @@ This module replaces that loop with a single fused executor:
 
 ``execute_plans_looped`` keeps the legacy per-plan dispatch alive for
 the before/after comparison in benchmarks/bench_kernels.py.
+
+Sparse planning contract (occupancy-aware stacks)
+-------------------------------------------------
+
+Block occupancy is *host-side static metadata* (numpy bool masks),
+never traced data — the whole point is that absent blocks are excluded
+at Generation time, so the executor dispatches fewer small-GEMMs
+instead of multiplying zeros (the paper's block-sparse regime):
+
+  * ``build_executor_plan`` / ``stack_executor`` accept
+    ``a_mask`` ((nbr, nbk)), ``b_mask`` ((nbk, nbc)) or a direct
+    ``pair_mask`` ((nbr, nbk, nbc)); the plan then contains only the
+    triples with ``a_mask[i, k] & b_mask[k, j]`` (ragged k-runs, runs
+    never split across stacks).  All-true masks are bit-identical to
+    the dense enumeration.
+  * Masks are unhashable numpy, so memoization keys on a content
+    fingerprint ``(shape, sha1(bytes))`` — identical mask *content*
+    hits the same cached plan regardless of array object identity.
+    The distributed layer (core/multiply.py) exploits this: one plan
+    per distinct shifted-mask fingerprint across cannon shifts / summa
+    panels.
+  * The operand payloads stay dense (absent blocks stored as zeros,
+    see core/dbcsr.py), so array shapes remain static for pjit; only
+    the triple tensor shrinks.  A plan whose mask product is empty has
+    ``n_stacks == 0`` and ``execute_plan`` returns C unchanged.
+  * ``ExecutorPlan.stats()`` reports ``n_dense_triples``,
+    ``n_skipped_triples`` and effective ``occupancy`` so benchmarks
+    (benchmarks/bench_sparse.py) can attribute the win.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 from typing import List, Optional, Tuple
 
 import jax
@@ -105,13 +134,60 @@ class ExecutorPlan:
     def n_padding(self) -> int:
         return self.n_stacks * self.stack_tile - self.n_entries
 
+    @property
+    def n_dense_triples(self) -> int:
+        """Triple count of the dense (mask-free) enumeration."""
+        return self.nbr * self.nbk * self.nbc
+
+    @property
+    def n_skipped_triples(self) -> int:
+        return self.n_dense_triples - self.n_entries
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of the dense triple grid the plan dispatches."""
+        dense = self.n_dense_triples
+        return self.n_entries / dense if dense else 1.0
+
     def stats(self) -> dict:
         from .stacks import stack_statistics
 
-        return stack_statistics(list(self.plans), stack_tile=self.stack_tile)
+        s = stack_statistics(
+            list(self.plans),
+            stack_tile=self.stack_tile if self.plans else None)
+        s["n_dense_triples"] = self.n_dense_triples
+        s["n_skipped_triples"] = self.n_skipped_triples
+        s["occupancy"] = self.occupancy
+        return s
 
 
-@functools.lru_cache(maxsize=None)
+# Masks are numpy bool arrays — unhashable, so the plan memo keys on a
+# content fingerprint (shape, sha1(bytes)).  The arrays themselves are
+# staged here only for the duration of a build_executor_plan call (the
+# cached builder reads them on a memo miss); nothing retains the
+# caller's masks afterwards, and masked-plan retention is bounded by
+# the LRU below rather than growing with every distinct mask ever seen.
+_STAGED_MASKS: dict = {}
+
+# Distinct dense geometries are few, but masked keys are open-ended
+# (one per occupancy pattern per shift/panel); bound the memo so a
+# long-running job with evolving sparsity cannot accumulate plans
+# without eviction.
+_PLAN_CACHE_SIZE = 1024
+
+
+def _mask_fingerprint(mask: Optional[np.ndarray]):
+    """Fingerprint a *private copy* of the mask — the caller's array is
+    never retained or frozen, so callers may mutate their masks between
+    multiplies (each content change simply fingerprints anew)."""
+    if mask is None:
+        return None
+    m = np.array(mask, dtype=bool, order="C")  # always a fresh copy
+    fp = (m.shape, hashlib.sha1(m.tobytes()).hexdigest())
+    _STAGED_MASKS.setdefault(fp, m)
+    return fp
+
+
 def build_executor_plan(
     m: int,
     k: int,
@@ -120,15 +196,53 @@ def build_executor_plan(
     block_k: int,
     block_n: int,
     stack_size: int = STACK_SIZE,
+    a_mask: Optional[np.ndarray] = None,
+    b_mask: Optional[np.ndarray] = None,
+    pair_mask: Optional[np.ndarray] = None,
 ) -> ExecutorPlan:
     """Generation + Scheduler phases for the local (m, k) x (k, n)
     multiply, memoized: repeated multiplies of the same geometry
-    (training steps, benchmark reps) never rebuild the numpy plans.
+    (training steps, benchmark reps, repeated cannon shifts with the
+    same occupancy pattern) never rebuild the numpy plans.  Occupancy
+    masks participate in the memo key by content fingerprint (see
+    module docstring: sparse planning contract).
     """
+    fps = (_mask_fingerprint(a_mask), _mask_fingerprint(b_mask),
+           _mask_fingerprint(pair_mask))
+    try:
+        return _build_executor_plan_cached(
+            m, k, n, block_m, block_k, block_n, stack_size, *fps)
+    finally:
+        for fp in fps:
+            if fp is not None:
+                _STAGED_MASKS.pop(fp, None)
+
+
+@functools.lru_cache(maxsize=_PLAN_CACHE_SIZE)
+def _build_executor_plan_cached(
+    m: int,
+    k: int,
+    n: int,
+    block_m: int,
+    block_k: int,
+    block_n: int,
+    stack_size: int,
+    a_fp,
+    b_fp,
+    pair_fp,
+) -> ExecutorPlan:
     a_layout = BlockLayout(m, k, block_m, block_k)
     b_layout = BlockLayout(k, n, block_k, block_n)
-    plans = build_stacks(a_layout, b_layout, stack_size)
-    padded = pad_plans(plans)
+    plans = build_stacks(
+        a_layout, b_layout, stack_size,
+        a_mask=None if a_fp is None else _STAGED_MASKS[a_fp],
+        b_mask=None if b_fp is None else _STAGED_MASKS[b_fp],
+        pair_mask=None if pair_fp is None else _STAGED_MASKS[pair_fp])
+    if plans:
+        padded = pad_plans(plans)
+    else:
+        # empty mask product: zero stacks, execute_plan is a no-op
+        padded = np.zeros((0, 1, 4), dtype=np.int32)
     padded.setflags(write=False)  # memoized => shared; guard against mutation
     return ExecutorPlan(
         triples=padded,
@@ -157,7 +271,12 @@ def execute_plan(
 
     A scratch C block is appended at index ``n_c_blocks`` to absorb the
     padding rows' (masked, zero) writes, and stripped from the result.
+
+    An empty plan (fully-absent mask product) returns ``c_blocks``
+    unchanged without dispatching anything.
     """
+    if plan.n_stacks == 0:
+        return c_blocks
     process = _resolve_process(kernel)
     bm, bn = c_blocks.shape[1], c_blocks.shape[2]
     if align and kernel == "smm":
@@ -210,6 +329,28 @@ def execute_plans_looped(
     return c
 
 
+def _mask_fill(
+    nbr: int,
+    nbk: int,
+    nbc: int,
+    a_mask: Optional[np.ndarray],
+    b_mask: Optional[np.ndarray],
+    pair_mask: Optional[np.ndarray],
+) -> float:
+    """Present-triple fraction of the dense grid (cheap, plan-free —
+    needed *before* plan construction to pick the occupancy-binned
+    autotune winner, whose stack_tile shapes the plan itself)."""
+    if pair_mask is not None:
+        return float(np.count_nonzero(pair_mask)) / pair_mask.size
+    if a_mask is None and b_mask is None:
+        return 1.0
+    from .stacks import normalize_block_masks
+
+    am, bm = normalize_block_masks(nbr, nbk, nbc, a_mask, b_mask)
+    return float((am.astype(np.int64) @ bm.astype(np.int64)).sum()) \
+        / (nbr * nbk * nbc)
+
+
 def stack_executor(
     m: int,
     k: int,
@@ -221,21 +362,33 @@ def stack_executor(
     stack_size: Optional[int] = None,
     align: Optional[bool] = None,
     kernel: str = "smm",
+    a_mask: Optional[np.ndarray] = None,
+    b_mask: Optional[np.ndarray] = None,
+    pair_mask: Optional[np.ndarray] = None,
 ):
     """Build the fused blocked local multiply ``(a, b) -> c``.
 
     ``stack_size`` / ``align`` default to the autotune winners table for
-    this block geometry (falling back to its heuristic when no sweep has
-    been recorded); pass explicit values to pin them.
+    this block geometry *and* occupancy bin (falling back to its
+    heuristic when no sweep has been recorded); pass explicit values to
+    pin them.  Occupancy masks follow the sparse planning contract
+    (module docstring): the executor dispatches only present triples;
+    operands still arrive as full dense arrays with absent blocks
+    zeroed.
     """
     from repro.kernels.smm.autotune import best_params_for
 
-    tuned_align, tuned_tile = best_params_for(block_m, block_k, block_n)
+    fill = _mask_fill(m // block_m, k // block_k, n // block_n,
+                      a_mask, b_mask, pair_mask)
+    tuned_align, tuned_tile = best_params_for(block_m, block_k, block_n,
+                                              fill=fill)
     if align is None:
         align = tuned_align
     if stack_size is None:
         stack_size = tuned_tile
-    plan = build_executor_plan(m, k, n, block_m, block_k, block_n, stack_size)
+    plan = build_executor_plan(m, k, n, block_m, block_k, block_n, stack_size,
+                               a_mask=a_mask, b_mask=b_mask,
+                               pair_mask=pair_mask)
 
     def f(a: jax.Array, b: jax.Array) -> jax.Array:
         if a.shape != (m, k) or b.shape != (k, n):

@@ -6,22 +6,214 @@ dominates, plus the beyond-paper 2.5D variant when a stack (pod) axis
 is available.  The local multiply is either 'densified' (one big GEMM
 — the paper's section III optimization, default for dense matrices) or
 'blocked' (stack-of-small-GEMMs via the smm kernel).
+
+Occupancy threading (blocked path): ``a_mask`` / ``b_mask`` are the
+*global* block-occupancy masks of the operands (host-side numpy bool).
+For every data-exchange step of the chosen algorithm — each cannon
+shift, each summa panel — this module slices the global masks down to
+the block ranges every mesh rank holds at that step and unions them
+over ranks (shard_map traces ONE program for all devices, so the
+per-step plan must cover every rank's present triples; the union is
+the tightest SPMD-uniform plan).  Plans are memoized per shifted-mask
+content fingerprint (core/engine.py), and a step whose unioned mask
+product is empty skips its ``execute_plan`` — and for summa, the panel
+broadcast — entirely.  The densified path ignores the masks: absent
+blocks are stored as zeros, so one big GEMM is already correct.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .blocking import GridSpec
 from .cannon import cannon_matmul
 from .cannon25d import cannon25d_matmul
 from .densify import blocked_local_matmul, densified_local_matmul
-from .summa import summa_matmul
+from .stacks import normalize_block_masks
+from .summa import summa_matmul, summa_n_panels
 from .tall_skinny import classify_shape, tall_skinny_matmul
 
 __all__ = ["distributed_matmul"]
+
+
+# ---------------------------------------------------------------------------
+# occupancy-mask slicing: global block masks -> per-step local plans
+# ---------------------------------------------------------------------------
+
+
+def _block_masks(
+    m: int, k: int, n: int,
+    block_m: int, block_k: int, block_n: int,
+    a_mask: Optional[np.ndarray], b_mask: Optional[np.ndarray],
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Normalise the *global* occupancy masks; a missing mask means the
+    operand is dense (all blocks present)."""
+    return normalize_block_masks(m // block_m, k // block_k, n // block_n,
+                                 a_mask, b_mask)
+
+
+def _cannon_pair_masks(
+    am: np.ndarray, bm: np.ndarray, pg: int, c_repl: int = 1,
+) -> List[np.ndarray]:
+    """Per-shift-step local pair-presence tensors for (2.5D) Cannon.
+
+    At inner step t, device (i, j) of replica p holds the A chunk
+    (i, q) and B chunk (q, j) with q = (i + j + p*spr + t) % pg.  The
+    returned (nbr_l, nbk_l, nbc_l) tensor for step t is the union over
+    all (p, i, j) of that rank's chunk-product presence — the tightest
+    plan every rank can share under SPMD.  Block-structured sparsity
+    (banded / block-diagonal operands) makes whole steps empty here,
+    which cannon_local_steps then skips.
+    """
+    nbr, nbk = am.shape
+    nbc = bm.shape[1]
+    if nbr % pg or nbk % pg or nbc % pg:
+        raise ValueError(
+            f"block grid ({nbr},{nbk},{nbc}) not divisible by cannon grid "
+            f"side {pg}")
+    if c_repl < 1 or pg % c_repl:
+        raise ValueError(f"grid side {pg} not divisible by replication {c_repl}")
+    lr, lk, lc = nbr // pg, nbk // pg, nbc // pg
+    spr = pg // c_repl  # shift steps each replica executes
+    out = []
+    for t in range(spr):
+        pair = np.zeros((lr, lk, lc), dtype=bool)
+        for p in range(c_repl):
+            off = t + p * spr
+            for i in range(pg):
+                for j in range(pg):
+                    q = (i + j + off) % pg
+                    ac = am[i * lr:(i + 1) * lr, q * lk:(q + 1) * lk]
+                    if not ac.any():
+                        continue
+                    bc = bm[q * lk:(q + 1) * lk, j * lc:(j + 1) * lc]
+                    pair |= ac[:, :, None] & bc[None, :, :]
+        out.append(pair)
+    return out
+
+
+def _summa_panel_masks(
+    am: np.ndarray, bm: np.ndarray, pr: int, pc: int, n_panels: int,
+) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Per-panel (a_mask, b_mask) unions for psum-broadcast SUMMA.
+
+    Panel p covers the global K block range [p*nbk/n_panels, ...); the
+    A-side union runs over the pr row chunks, the B-side over the pc
+    column chunks.  Because the row and column ranks vary independently,
+    the union of per-rank products equals the product of the factored
+    unions — no 3D pair tensor needed.
+    """
+    nbr, nbk = am.shape
+    nbc = bm.shape[1]
+    if nbr % pr or nbc % pc or nbk % n_panels:
+        raise ValueError(
+            f"block grid ({nbr},{nbk},{nbc}) not divisible by summa grid "
+            f"{pr}x{pc} with {n_panels} panels")
+    lr, lc, lkp = nbr // pr, nbc // pc, nbk // n_panels
+    out = []
+    for p in range(n_panels):
+        ksl = slice(p * lkp, (p + 1) * lkp)
+        ua = np.zeros((lr, lkp), dtype=bool)
+        for i in range(pr):
+            ua |= am[i * lr:(i + 1) * lr, ksl]
+        ub = np.zeros((lkp, lc), dtype=bool)
+        for j in range(pc):
+            ub |= bm[ksl, j * lc:(j + 1) * lc]
+        out.append((ua, ub))
+    return out
+
+
+def _summa_gather_masks(
+    am: np.ndarray, bm: np.ndarray, pr: int, pc: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Factored unions for PUMMA-style (all-gather) SUMMA: the local
+    multiply sees the full K extent, so there is a single step whose A
+    mask unions over row chunks and B mask over column chunks."""
+    nbr, nbk = am.shape
+    nbc = bm.shape[1]
+    if nbr % pr or nbc % pc:
+        raise ValueError(
+            f"block grid ({nbr},{nbc}) not divisible by grid {pr}x{pc}")
+    lr, lc = nbr // pr, nbc // pc
+    ua = np.zeros((lr, nbk), dtype=bool)
+    for i in range(pr):
+        ua |= am[i * lr:(i + 1) * lr]
+    ub = np.zeros((nbk, lc), dtype=bool)
+    for j in range(pc):
+        ub |= bm[:, j * lc:(j + 1) * lc]
+    return ua, ub
+
+
+def _ts_masks(algorithm: str, am: np.ndarray, bm: np.ndarray,
+              p_all: int) -> dict:
+    """Single-step mask kwargs for the tall-and-skinny variants (the
+    contraction/tall dimension is sharded over all p_all devices)."""
+    nbr, nbk = am.shape
+    nbc = bm.shape[1]
+    if algorithm == "ts_k":
+        if nbk % p_all:
+            raise ValueError(f"K block grid {nbk} not divisible by {p_all}")
+        lk = nbk // p_all
+        pair = np.zeros((nbr, lk, nbc), dtype=bool)
+        for d in range(p_all):
+            ac = am[:, d * lk:(d + 1) * lk]
+            if not ac.any():
+                continue
+            bc = bm[d * lk:(d + 1) * lk, :]
+            pair |= ac[:, :, None] & bc[None, :, :]
+        return {"pair_mask": pair}
+    if algorithm == "ts_m":
+        if nbr % p_all:
+            raise ValueError(f"M block grid {nbr} not divisible by {p_all}")
+        lr = nbr // p_all
+        ua = np.zeros((lr, nbk), dtype=bool)
+        for d in range(p_all):
+            ua |= am[d * lr:(d + 1) * lr]
+        return {"a_mask": ua, "b_mask": bm}
+    if nbc % p_all:
+        raise ValueError(f"N block grid {nbc} not divisible by {p_all}")
+    lc = nbc // p_all
+    ub = np.zeros((nbk, lc), dtype=bool)
+    for d in range(p_all):
+        ub |= bm[:, d * lc:(d + 1) * lc]
+    return {"a_mask": am, "b_mask": ub}
+
+
+def _masks_empty(mask_kwargs: dict) -> bool:
+    if "pair_mask" in mask_kwargs:
+        return not mask_kwargs["pair_mask"].any()
+    ua, ub = mask_kwargs["a_mask"], mask_kwargs["b_mask"]
+    return not bool(np.any(ua.any(axis=0) & ub.any(axis=1)))
+
+
+def _stepwise_blocked_lm(
+    ml: int, kl: int, nl: int, *, mask_steps: List[dict], **blocked_kw,
+):
+    """A stepwise local multiply: one fused stack executor per data-
+    exchange step (plans deduplicated by mask fingerprint through the
+    engine memo).  Steps whose mask product is empty carry no executor;
+    callers (cannon_local_steps / summa_matmul) skip them host-side.
+    """
+    fns, empty = [], set()
+    for t, mask_kwargs in enumerate(mask_steps):
+        if _masks_empty(mask_kwargs):
+            fns.append(None)
+            empty.add(t)
+        else:
+            fns.append(blocked_local_matmul(ml, kl, nl, **mask_kwargs,
+                                            **blocked_kw))
+
+    def lm(a_loc: jax.Array, b_loc: jax.Array, step: int = 0):
+        f = fns[step]
+        return None if f is None else f(a_loc, b_loc)
+
+    lm.stepwise = True
+    lm.empty_steps = frozenset(empty)
+    lm.step_executors = fns
+    return lm
 
 
 def distributed_matmul(
@@ -38,6 +230,8 @@ def distributed_matmul(
     stack_size: Optional[int] = None,
     align: Optional[bool] = None,
     local_kernel: Optional[str] = None,
+    a_mask: Optional[np.ndarray] = None,
+    b_mask: Optional[np.ndarray] = None,
     precision=jax.lax.Precision.DEFAULT,
     double_buffer: bool = True,
     **kw,
@@ -51,7 +245,13 @@ def distributed_matmul(
       summa        — the ScaLAPACK-PDGEMM-style baseline
 
     For the blocked path (``densify=False``) ``stack_size``/``align``
-    default to the smm autotune winners table for the block geometry.
+    default to the smm autotune winners table for the block geometry
+    and occupancy bin.  ``a_mask`` / ``b_mask`` are *global* block
+    occupancy masks ((M/block_m, K/block_k) / (K/block_k, N/block_n)
+    numpy bool); the blocked path then plans only present triples per
+    data-exchange step and skips steps whose mask product is empty (see
+    module docstring).  The densified path ignores them (absent blocks
+    are zeros, the single big GEMM is already correct).
     """
     m, k = a.shape
     k2, n = b.shape
@@ -71,6 +271,7 @@ def distributed_matmul(
         lm = densified_local_matmul(precision, kernel=local_kernel)
     else:
         pr, pc = grid.grid_shape(mesh)
+        pg = p_all = n_panels = None
         if algorithm.startswith("ts_"):
             p_all = pr * pc * grid.stack_size(mesh)
             shapes = {
@@ -90,29 +291,56 @@ def distributed_matmul(
                 raise ValueError(
                     f"shape ({m},{k},{n}) not divisible by grid side {pg}")
             ml, kl, nl = m // pg, k // pg, n // pg
+        elif kw.get("bcast") == "gather":
+            # PUMMA-style broadcast: the local multiply sees the
+            # all-gathered full-K row of A / column of B — a single
+            # stack-plan geometry on any grid shape.
+            if m % pr or n % pc:
+                raise ValueError(
+                    f"shape ({m},{n}) not divisible by grid {pr}x{pc}")
+            ml, kl, nl = m // pr, k, n // pc
         else:
-            # summa hands the full local operands to the local multiply
-            # only on square grids (otherwise panels are strict slices of
-            # the local K extent and a fixed stack plan cannot describe
-            # them).
-            if pr != pc:
+            # summa psum: every panel's local multiply is
+            # (m/pr, k/n_panels) @ (k/n_panels, n/pc) — one per-panel
+            # stack-plan geometry shared by all panels, so non-square
+            # grids are fine (for square grids k/n_panels == k/pc, the
+            # historical full-local-K geometry).
+            n_panels = summa_n_panels(pr, pc)
+            if m % pr or n % pc or k % n_panels:
                 raise ValueError(
-                    f"blocked local multiply requires a square grid for "
-                    f"{algorithm!r}; got {pr}x{pc} (use densify=True)")
-            if m % pr or k % pc or n % pc:
-                raise ValueError(
-                    f"shape ({m},{k},{n}) not divisible by grid {pr}x{pc}")
-            if kw.get("bcast") == "gather":
-                # PUMMA-style broadcast: the local multiply sees the
-                # all-gathered full-K row of A / column of B
-                ml, kl, nl = m // pr, k, n // pc
-            else:
-                ml, kl, nl = m // pr, k // pc, n // pc
-        lm = blocked_local_matmul(
-            ml, kl, nl, block_m=block_m, block_k=block_k, block_n=block_n,
+                    f"shape ({m},{k},{n}) not divisible by summa grid "
+                    f"{pr}x{pc} with {n_panels} panels")
+            ml, kl, nl = m // pr, k // n_panels, n // pc
+
+        blocked_kw = dict(
+            block_m=block_m, block_k=block_k, block_n=block_n,
             stack_size=stack_size, align=align,
-            kernel=local_kernel or "smm",
-        )
+            kernel=local_kernel or "smm")
+        if a_mask is None and b_mask is None:
+            lm = blocked_local_matmul(ml, kl, nl, **blocked_kw)
+        else:
+            am, bmk = _block_masks(m, k, n, block_m, block_k, block_n,
+                                   a_mask, b_mask)
+            if algorithm in ("cannon", "cannon25d"):
+                c_repl = (grid.stack_size(mesh)
+                          if algorithm == "cannon25d" else 1)
+                steps = [{"pair_mask": pm}
+                         for pm in _cannon_pair_masks(am, bmk, pg, c_repl)]
+                lm = _stepwise_blocked_lm(ml, kl, nl, mask_steps=steps,
+                                          **blocked_kw)
+            elif algorithm == "summa" and kw.get("bcast") != "gather":
+                steps = [{"a_mask": ua, "b_mask": ub} for ua, ub in
+                         _summa_panel_masks(am, bmk, pr, pc, n_panels)]
+                lm = _stepwise_blocked_lm(ml, kl, nl, mask_steps=steps,
+                                          **blocked_kw)
+            elif algorithm == "summa":
+                ua, ub = _summa_gather_masks(am, bmk, pr, pc)
+                lm = blocked_local_matmul(ml, kl, nl, a_mask=ua, b_mask=ub,
+                                          **blocked_kw)
+            else:
+                lm = blocked_local_matmul(
+                    ml, kl, nl, **_ts_masks(algorithm, am, bmk, p_all),
+                    **blocked_kw)
 
     # ---- data-exchange algorithm --------------------------------------
     if algorithm == "cannon":

@@ -22,6 +22,7 @@ Unlike Cannon, SUMMA supports non-square process grids.
 """
 from __future__ import annotations
 
+import math
 from typing import Callable, Optional
 
 import jax
@@ -33,7 +34,17 @@ from repro.compat import shard_map
 from .blocking import GridSpec
 from .cannon import _default_local_matmul
 
-__all__ = ["summa_matmul"]
+__all__ = ["summa_matmul", "summa_n_panels"]
+
+
+def summa_n_panels(pr: int, pc: int) -> int:
+    """Contraction panel count of the psum-broadcast SUMMA on a (pr, pc)
+    grid: one panel per grid column of A for square grids; the lcm for
+    non-square so both the A column owner and the B row owner of every
+    panel are well defined.  Exported so the blocked local-multiply
+    planner (core/multiply.py) sizes per-panel stack plans consistently.
+    """
+    return pc if pr == pc else math.lcm(pr, pc)
 
 
 def summa_matmul(
@@ -72,14 +83,15 @@ def summa_matmul(
     if bcast != "psum":
         raise ValueError(bcast)
 
-    # Panel count: one panel per grid column of A (= per grid row of B).
-    # For non-square grids the contraction panels follow the larger of
-    # (pc, pr); we require pc == pr panels only when both own K shards.
-    n_panels = pc  # A is K-split over columns
-    if pr != pc:
-        # general case: iterate over lcm so both owners are well defined
-        import math
-        n_panels = math.lcm(pr, pc)
+    # Panel count: one panel per grid column of A (= per grid row of B);
+    # the lcm for non-square grids (see summa_n_panels).
+    n_panels = summa_n_panels(pr, pc)
+    # Stepwise (occupancy-masked) local multiplies carry per-panel stack
+    # plans and a host-static set of panels whose mask product is empty
+    # on every rank — those skip the broadcast AND the local multiply
+    # (uniform across devices, so SPMD-safe).
+    stepwise = bool(getattr(lm, "stepwise", False))
+    empty_steps = getattr(lm, "empty_steps", frozenset())
 
     def body(a_blk, b_blk):
         my_col = jax.lax.axis_index(col_ax)
@@ -89,6 +101,8 @@ def summa_matmul(
         c = jnp.zeros((a_blk.shape[0], b_blk.shape[1]), jnp.float32)
 
         for p in range(n_panels):
+            if p in empty_steps:
+                continue
             # owner coordinates of panel p
             col_owner = p * pc // n_panels
             row_owner = p * pr // n_panels
@@ -101,7 +115,10 @@ def summa_matmul(
             a_panel = jax.lax.psum(a_panel, col_ax)
             b_panel = jnp.where(my_row == row_owner, b_panel, 0)
             b_panel = jax.lax.psum(b_panel, row_ax)
-            c = c + lm(a_panel, b_panel).astype(jnp.float32)
+            part = (lm(a_panel, b_panel, step=p) if stepwise
+                    else lm(a_panel, b_panel))
+            if part is not None:
+                c = c + part.astype(jnp.float32)
         return c.astype(out_dtype)
 
     spec = P(row_ax, col_ax)

@@ -7,18 +7,26 @@ space is BlockSpec-level and small enough to sweep directly:
   * MXU alignment on/off (pad blocks to (8, 128) multiples),
   * stack tile (how many stack entries per kernel launch chunk),
 
-measured per (m, n, k) block size and cached to a JSON winners table.
+measured per (m, n, k) block size and *occupancy bin* and cached to a
+JSON winners table.  Occupancy binning matters because the best
+stack_tile for a sparse workload is not the dense winner: at 10% fill
+the ragged k-runs pack into far fewer entries per C-run, so a 30'000
+tile is almost all padding while a small tile wins — the sweep records
+a winner per FILL_BINS bin (dense entries keep their legacy un-suffixed
+key; sparse entries are keyed ``"<block>@<bin>"``).
 On this CPU container the sweep times interpret-mode execution (a
 correctness vehicle, so the *absolute* numbers are not TPU truth —
 the harness and cache format are what transfer; on real hardware the
 same sweep runs the compiled kernel).
 
-    PYTHONPATH=src python -m repro.kernels.smm.autotune --blocks 22 64
+    PYTHONPATH=src python -m repro.kernels.smm.autotune --blocks 22 64 \
+        --fills 1.0 0.5 0.2 0.05
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import time
 from typing import Dict, List, Tuple
@@ -39,6 +47,23 @@ SPACE: List[Tuple[bool, int]] = [
     (True, 1024), (True, 4096), (True, 30000),
 ]
 
+# occupancy bins of the winners table (present-triple fraction of the
+# dense grid); the sweep in benchmarks/bench_sparse.py uses the same
+# grid.  Lookups snap to the nearest bin in log space.
+FILL_BINS: Tuple[float, ...] = (1.0, 0.5, 0.2, 0.05)
+
+
+def fill_bin(fill: float) -> float:
+    """Snap an effective occupancy to the nearest winners-table bin
+    (log-space nearest: 0.08 is closer to 0.05 than to 0.2)."""
+    f = min(max(float(fill), 1e-9), 1.0)
+    return min(FILL_BINS, key=lambda b: abs(math.log(f / b)))
+
+
+def _cache_key(block: int, bin_: float) -> str:
+    # dense keeps the legacy key so existing winners tables stay valid
+    return str(block) if bin_ >= 1.0 else f"{block}@{bin_:g}"
+
 
 def _bench(fn, *args, reps: int = 3) -> float:
     jax.block_until_ready(fn(*args))
@@ -49,12 +74,32 @@ def _bench(fn, *args, reps: int = 3) -> float:
 
 
 def tune_block(block: int, *, n_blocks: int = 8,
-               use_kernel: bool = False) -> Dict:
-    """Sweep SPACE for a (block x block x block) stack workload."""
+               use_kernel: bool = False, fill: float = 1.0) -> Dict:
+    """Sweep SPACE for a (block x block x block) stack workload at the
+    given *effective triple occupancy* ``fill``.
+
+    The bin must mean the same thing the dispatch-side lookup computes
+    (engine._mask_fill: present-triple fraction of the dense grid), so
+    the sweep uses a one-sided A mask with exactly
+    ``round(fill * n_cells)`` present blocks — the plan's triple
+    occupancy then equals ``fill`` (two independent rate-``fill`` masks
+    would give ~fill^2 and record winners an order of magnitude sparser
+    than the workloads their bin serves).
+    """
     m = k = n = block * n_blocks
     rng = np.random.RandomState(0)
     a = jnp.asarray(rng.randn(m, k).astype(np.float32))
     b = jnp.asarray(rng.randn(k, n).astype(np.float32))
+    a_mask = b_mask = None
+    if fill < 1.0:
+        mask_rng = np.random.RandomState(1)
+        n_cells = n_blocks * n_blocks
+        n_true = max(1, round(fill * n_cells))  # never tune the empty plan
+        a_mask = np.zeros(n_cells, dtype=bool)
+        a_mask[mask_rng.choice(n_cells, n_true, replace=False)] = True
+        a_mask = a_mask.reshape(n_blocks, n_blocks)
+        mask_a_full = np.repeat(np.repeat(a_mask, block, 0), block, 1)
+        a = a * jnp.asarray(mask_a_full, jnp.float32)
     a_blocks = to_blocks(a, block, block)
     b_blocks = to_blocks(b, block, block)
 
@@ -72,7 +117,8 @@ def tune_block(block: int, *, n_blocks: int = 8,
         space = [(heur_align, t) for t in sorted({t for _, t in SPACE})]
     rows = []
     for align, stack_tile in space:
-        plan = build_executor_plan(m, k, n, block, block, block, stack_tile)
+        plan = build_executor_plan(m, k, n, block, block, block, stack_tile,
+                                   a_mask=a_mask, b_mask=b_mask)
         c = jnp.zeros((n_blocks * n_blocks, block, block), jnp.float32)
 
         def run(c0=c, plan=plan, align=align):
@@ -80,42 +126,57 @@ def tune_block(block: int, *, n_blocks: int = 8,
                                 kernel=kernel, align=align)
 
         dt = _bench(jax.jit(run))
-        flops = 2 * m * k * n
+        # useful flops only: absent triples are skipped, not multiplied
+        flops = plan.n_entries * 2 * block ** 3
         rows.append({"align": align, "stack_tile": stack_tile,
                      "time_s": dt, "gflops": flops / dt / 1e9,
-                     "n_stacks": plan.n_stacks})
+                     "n_stacks": plan.n_stacks,
+                     "n_entries": plan.n_entries})
     best = min(rows, key=lambda r: r["time_s"])
-    return {"block": block, "rows": rows, "best": best}
+    return {"block": block, "fill": fill, "rows": rows, "best": best}
 
 
-def load_cache(path: str = DEFAULT_CACHE) -> Dict:
+def load_cache(path: str | None = None) -> Dict:
+    # path resolves at call time so tests / tools can repoint
+    # DEFAULT_CACHE after import
+    path = DEFAULT_CACHE if path is None else path
     if os.path.exists(path):
         with open(path) as f:
             return json.load(f)
     return {}
 
 
-def best_params(block: int, path: str = DEFAULT_CACHE) -> Tuple[bool, int]:
-    """Winner lookup used by callers; falls back to a sane default."""
+def best_params(block: int, path: str | None = None, *,
+                fill: float = 1.0) -> Tuple[bool, int]:
+    """Winner lookup used by callers; falls back through the dense
+    entry (a sparse bin with no recorded sweep) to a sane default."""
     cache = load_cache(path)
-    entry = cache.get(str(block))
-    if entry:
-        return entry["best"]["align"], entry["best"]["stack_tile"]
+    b = fill_bin(fill)
+    keys = [_cache_key(block, b)]
+    if b < 1.0:
+        keys.append(str(block))
+    for key in keys:
+        entry = cache.get(key)
+        if entry:
+            return entry["best"]["align"], entry["best"]["stack_tile"]
     return (block % 8 != 0 or block % 128 != 0), 30000
 
 
 def best_params_for(block_m: int, block_k: int, block_n: int,
-                    path: str = DEFAULT_CACHE) -> Tuple[bool, int]:
-    """Winner lookup for a (possibly non-uniform) block geometry — the
-    dispatch-path entry point (core/engine.py resolves ``align`` /
-    ``stack_tile`` through this when the caller doesn't pin them).
+                    path: str | None = None, *,
+                    fill: float = 1.0) -> Tuple[bool, int]:
+    """Winner lookup for a (possibly non-uniform) block geometry and
+    occupancy — the dispatch-path entry point (core/engine.py resolves
+    ``align`` / ``stack_tile`` through this when the caller doesn't pin
+    them, passing the plan's effective fill so sparse workloads get the
+    occupancy-binned winner).
 
     The winners table is keyed on uniform block sizes (the paper's
     regime); non-uniform geometries fall back to the heuristic: align
     iff MXU padding would change the block shape.
     """
     if block_m == block_k == block_n:
-        return best_params(block_m, path)
+        return best_params(block_m, path, fill=fill)
     align = mxu_pad_shape(block_m, block_k, block_n, True) != \
         (block_m, block_k, block_n)
     return align, 30000
@@ -124,6 +185,8 @@ def best_params_for(block_m: int, block_k: int, block_n: int,
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--blocks", type=int, nargs="+", default=[22, 64])
+    ap.add_argument("--fills", type=float, nargs="+", default=[1.0],
+                    help="occupancy bins to sweep (see FILL_BINS)")
     ap.add_argument("--cache", default=DEFAULT_CACHE)
     ap.add_argument("--kernel", action="store_true",
                     help="sweep the interpret-mode Pallas kernel itself")
@@ -131,11 +194,13 @@ def main():
 
     cache = load_cache(args.cache)
     for block in args.blocks:
-        result = tune_block(block, use_kernel=args.kernel)
-        cache[str(block)] = result
-        b = result["best"]
-        print(f"block {block:3d}: best align={b['align']} "
-              f"stack_tile={b['stack_tile']} ({b['gflops']:.2f} GF/s)")
+        for fill in args.fills:
+            bin_ = fill_bin(fill)
+            result = tune_block(block, use_kernel=args.kernel, fill=bin_)
+            cache[_cache_key(block, bin_)] = result
+            b = result["best"]
+            print(f"block {block:3d} fill {bin_:4g}: best align={b['align']} "
+                  f"stack_tile={b['stack_tile']} ({b['gflops']:.2f} GF/s)")
     os.makedirs(os.path.dirname(args.cache) or ".", exist_ok=True)
     with open(args.cache, "w") as f:
         json.dump(cache, f, indent=1)

@@ -62,3 +62,56 @@ def test_block_sparse_semantics(setup):
     Cm = dbcsr.multiply(Am, Bm, mesh=mesh, algorithm="cannon")
     expected_mask = (mask.astype(int) @ mask.astype(int)) > 0
     np.testing.assert_array_equal(Cm.block_mask, expected_mask)
+
+
+def test_block_mask_survives_jit_roundtrip(setup):
+    """The pytree aux carries (shape, bytes) of the mask, so block
+    sparsity must survive jit (tree_unflatten used to rebuild None)."""
+    mesh, grid, A, B = setup
+    mask = np.zeros((4, 4), bool)
+    mask[0, :] = True
+    Am = dbcsr.create(A, mesh=mesh, grid=grid, block_size=32, block_mask=mask)
+
+    @jax.jit
+    def scale(m: dbcsr.DBCSRMatrix) -> dbcsr.DBCSRMatrix:
+        return m.scale(2.0)
+
+    out = scale(Am)
+    assert out.block_mask is not None
+    np.testing.assert_array_equal(out.block_mask, mask)
+    np.testing.assert_allclose(np.asarray(out.data), np.asarray(Am.data) * 2,
+                               rtol=1e-6)
+    # explicit flatten/unflatten round-trip too
+    leaves, treedef = jax.tree_util.tree_flatten(Am)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    np.testing.assert_array_equal(back.block_mask, mask)
+    # dense matrices still round-trip with no mask
+    Bm = dbcsr.create(B, mesh=mesh, grid=grid, block_size=32)
+    assert scale(Bm).block_mask is None
+
+
+def test_multiply_single_masked_operand_mask_flows(setup):
+    """multiply() with exactly one masked operand: the symbolic product
+    mask (missing mask treated as all-present) lands on the result and
+    matches the numeric block support; add() stays dense (documented)."""
+    mesh, grid, A, B = setup
+    mask = np.zeros((4, 4), bool)
+    mask[0, :] = True
+    mask[2, 1] = True
+    Am = dbcsr.create(A, mesh=mesh, grid=grid, block_size=32, block_mask=mask)
+    Bm = dbcsr.create(B, mesh=mesh, grid=grid, block_size=32)
+    Cm = dbcsr.multiply(Am, Bm, mesh=mesh, algorithm="cannon")
+    expected = (mask.astype(np.int64) @ np.ones((4, 4), np.int64)) > 0
+    np.testing.assert_array_equal(Cm.block_mask, expected)
+    # symbolic mask == numeric support (random data: no exact cancels)
+    Cb = np.asarray(Cm.data).reshape(4, 32, 4, 32)
+    support = np.abs(Cb).max(axis=(1, 3)) > 0
+    np.testing.assert_array_equal(support, expected)
+    # blocked sparse path agrees with the densified product
+    Cm_blocked = dbcsr.multiply(Am, Bm, mesh=mesh, algorithm="cannon",
+                                densify=False, local_kernel="ref")
+    np.testing.assert_allclose(np.asarray(Cm_blocked.data),
+                               np.asarray(Cm.data), rtol=0, atol=1e-3)
+    # add: union with a dense operand is dense -> mask is None
+    assert dbcsr.add(Am, Bm).block_mask is None
+    np.testing.assert_array_equal(dbcsr.add(Am, Am).block_mask, mask)

@@ -186,8 +186,11 @@ def test_best_params_reads_winners_table(tmp_path):
 
 
 def test_blocked_nonsquare_grid_raises():
-    """Cannon/summa blocked paths must refuse non-square grids loudly
-    instead of silently building wrong StackPlan geometry."""
+    """The cannon blocked path must refuse non-square grids loudly
+    instead of silently building wrong StackPlan geometry.  (Summa
+    no longer rejects non-square grids: its blocked path builds
+    per-panel plans — covered by the geometry battery below; it still
+    rejects shapes whose panels don't block-divide.)"""
     mesh = types.SimpleNamespace(shape={"data": 2, "model": 4})
     a = jnp.zeros((64, 96), jnp.float32)
     b = jnp.zeros((96, 80), jnp.float32)
@@ -195,7 +198,8 @@ def test_blocked_nonsquare_grid_raises():
         distributed_matmul(a, b, mesh=mesh, grid=GridSpec("data", "model"),
                            algorithm="cannon", densify=False,
                            block_m=8, block_k=8, block_n=8)
-    with pytest.raises(ValueError, match="square"):
+    # 2x4 grid: N/pc = 20 does not divide into 8-blocks -> loud error
+    with pytest.raises(ValueError, match="divisible"):
         distributed_matmul(a, b, mesh=mesh, grid=GridSpec("data", "model"),
                            algorithm="summa", densify=False,
                            block_m=8, block_k=8, block_n=8)
@@ -240,6 +244,21 @@ for pg in (1, 2):
                                 local_kernel="ref", bcast=bcast)
         out[f"summa_{bcast}_blocked_{pg}x{pg}"] = float(
             np.max(np.abs(np.asarray(Cs) - ref)))
+
+# non-square grids: summa's blocked path builds per-panel plans (panel
+# K-extent k/lcm(pr,pc) != the local K extent), no longer a ValueError
+for pr, pc in ((1, 2), (2, 1)):
+    mesh = make_mesh((pr, pc), ("data", "model"))
+    grid = GridSpec("data", "model")
+    sh = NamedSharding(mesh, P("data", "model"))
+    Ad, Bd = jax.device_put(A, sh), jax.device_put(B, sh)
+    for bcast in ("psum", "gather"):
+        Cs = distributed_matmul(Ad, Bd, mesh=mesh, grid=grid,
+                                algorithm="summa", densify=False,
+                                block_m=8, block_k=8, block_n=8,
+                                local_kernel="ref", bcast=bcast)
+        out[f"summa_{bcast}_blocked_{pr}x{pc}"] = float(
+            np.max(np.abs(np.asarray(Cs) - ref)))
 print("JSON" + json.dumps(out))
 """
 
@@ -257,6 +276,8 @@ def geometry_results():
     "blocked_vs_dense_2x2", "blocked_vs_densified_2x2",
     "summa_psum_blocked_1x1", "summa_gather_blocked_1x1",
     "summa_psum_blocked_2x2", "summa_gather_blocked_2x2",
+    "summa_psum_blocked_1x2", "summa_gather_blocked_1x2",
+    "summa_psum_blocked_2x1", "summa_gather_blocked_2x1",
 ])
 def test_blocked_local_geometry(geometry_results, key):
     assert geometry_results[key] < 2e-4, (key, geometry_results[key])
