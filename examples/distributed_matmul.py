@@ -21,6 +21,7 @@ from repro.core.blocking import GridSpec
 from repro.core.multiply import distributed_matmul
 from repro.core.tall_skinny import classify_shape
 from repro.launch.mesh import make_mesh
+from repro.planner import plan_multiply
 
 
 def timed(tag, fn, *args):
@@ -45,14 +46,25 @@ def main():
     A = rng.randn(n, n).astype(np.float32)
     B = rng.randn(n, n).astype(np.float32)
     Ad, Bd = jax.device_put(A, sh), jax.device_put(B, sh)
-    print(f"  dispatch: {classify_shape(n, n, n)}")
-    c1, t_cannon = timed("cannon + densified", jax.jit(
-        lambda a, b: distributed_matmul(a, b, mesh=mesh, grid=grid,
-                                        algorithm="cannon")), Ad, Bd)
+    # algorithm="auto" routes through the cost-model planner
+    # (repro.planner.plan_multiply); return_plan exposes the decision,
+    # and plan.explain() prints the per-candidate predicted costs, e.g.:
+    #
+    #   plan: cannon + densified  occupancy=1  predicted=1.4 ms
+    #     candidate          comm_ms  compute_ms  overhead_ms  total_ms
+    #   * cannon+densified     0.79      0.39        0.21        1.40
+    #     summa+densified      1.59      0.39        0.41        2.39
+    #     ts_k+densified       3.17      0.39        0.21        3.77
+    #     ...
+    #     cannon25d+densified     -         -           -           -
+    #                           infeasible: no replication axis
+    print(plan_multiply(n, n, n, mesh_shape=(4, 4)).explain())
+    c1, t_auto = timed("auto (planner)", jax.jit(
+        lambda a, b: distributed_matmul(a, b, mesh=mesh, grid=grid)), Ad, Bd)
     c2, t_summa = timed("SUMMA (PDGEMM baseline)", jax.jit(
         lambda a, b: distributed_matmul(a, b, mesh=mesh, grid=grid,
                                         algorithm="summa")), Ad, Bd)
-    print(f"  speedup vs PDGEMM: {t_summa/t_cannon:.2f}x   "
+    print(f"  speedup vs PDGEMM: {t_summa/t_auto:.2f}x   "
           f"agreement: {float(np.max(np.abs(np.asarray(c1)-np.asarray(c2)))):.1e}")
 
     print("== tall-and-skinny (paper: 1'408 x 1'982'464; scaled) ==")
@@ -60,13 +72,13 @@ def main():
     k = 45056
     A2 = rng.randn(m, k).astype(np.float32)
     B2 = rng.randn(k, nn).astype(np.float32)
-    print(f"  dispatch: {classify_shape(m, k, nn)}")
+    print(f"  shape-only classification: {classify_shape(m, k, nn)}")
     A2d = jax.device_put(A2, NamedSharding(mesh, P(None, ("data", "model"))))
     B2d = jax.device_put(B2, NamedSharding(mesh, P(("data", "model"), None)))
-    c3, t_ts = timed("tall-skinny (O(1) comm)", jax.jit(
-        lambda a, b: distributed_matmul(a, b, mesh=mesh, grid=grid,
-                                        algorithm="ts_k",
-                                        reduce="reduce_scatter")), A2d, B2d)
+    print(plan_multiply(m, k, nn, mesh_shape=(4, 4)).explain())
+    c3, t_ts = timed("auto (planner)", jax.jit(
+        lambda a, b: distributed_matmul(a, b, mesh=mesh, grid=grid)),
+        A2d, B2d)
     A2s, B2s = jax.device_put(A2, sh), jax.device_put(B2, sh)
     c4, t_sm = timed("SUMMA (PDGEMM baseline)", jax.jit(
         lambda a, b: distributed_matmul(a, b, mesh=mesh, grid=grid,

@@ -16,3 +16,10 @@ python -m pytest -x -q
 # bench trajectory (artifacts/bench/sparse_smoke.json) and gated —
 # --check fails the build if dispatch time stops falling with occupancy
 python benchmarks/bench_sparse.py --smoke --check
+
+# multiply planner: recalibrates the cost model on this machine, sweeps
+# square/tall/skinny x occupancy fills, and gates planner regret — the
+# auto plan must be within 10% (+1ms interpret-mode jitter floor) of
+# the best fixed (algorithm, local-path) choice at every sweep point
+# (artifacts/bench/planner_smoke.json)
+python benchmarks/bench_planner.py --smoke --check

@@ -7,7 +7,8 @@ from .blocking import BlockLayout, GridSpec
 from .multiply import distributed_matmul
 from .cannon import cannon_matmul
 from .cannon25d import cannon25d_matmul
-from .tall_skinny import tall_skinny_matmul, classify_shape
+from .tall_skinny import (tall_skinny_matmul, classify_shape,
+                          ts_classify_ratio, DEFAULT_TS_RATIO)
 from .summa import summa_matmul
 from .densify import densify, undensify, to_blocks, from_blocks
 from .engine import (ExecutorPlan, build_executor_plan, execute_plan,
@@ -17,6 +18,7 @@ from .stacks import build_stacks, pad_plans, StackPlan, STACK_SIZE
 __all__ = [
     "BlockLayout", "GridSpec", "distributed_matmul", "cannon_matmul",
     "cannon25d_matmul", "tall_skinny_matmul", "classify_shape",
+    "ts_classify_ratio", "DEFAULT_TS_RATIO",
     "summa_matmul", "densify", "undensify", "to_blocks", "from_blocks",
     "build_stacks", "pad_plans", "StackPlan", "STACK_SIZE",
     "ExecutorPlan", "build_executor_plan", "execute_plan", "stack_executor",

@@ -38,6 +38,10 @@ class DBCSRMatrix:
     layout    : block structure metadata
     grid      : mesh-axis names of the process grid
     block_mask: optional (nbr, nbc) numpy bool — block-sparse occupancy
+
+    Products returned by ``multiply`` additionally carry the executed
+    ``MultiplyPlan`` as a plain ``last_plan`` attribute (host-side
+    observability only — not part of the pytree, does not survive jit).
     """
 
     data: jax.Array
@@ -151,11 +155,16 @@ def multiply(
     *,
     mesh: Mesh,
     algorithm: str = "auto",
-    densify: bool = True,
+    densify: Optional[bool] = None,
+    return_plan: bool = False,
     **kw,
 ) -> DBCSRMatrix:
-    """C = A @ B — dispatches to the data-exchange algorithm (see
-    multiply.py for the dispatch rules).
+    """C = A @ B — with ``algorithm="auto"`` (the default) the
+    cost-model planner (repro.planner.plan_multiply) picks the
+    data-exchange algorithm AND the local path for this (shape,
+    occupancy, mesh); a fixed ``algorithm=``/``densify=`` pins them
+    (``densify=None`` under a fixed algorithm means densified, the
+    legacy default).
 
     Block occupancy flows end to end: the operands' masks are handed to
     the distributed dispatcher (the blocked path plans only present
@@ -163,15 +172,23 @@ def multiply(
     the symbolic product mask ``(a_mask @ b_mask) > 0`` — with a missing
     operand mask treated as all-present, so a single masked operand
     still constrains the product's support.
+
+    The executed plan is observable without re-deriving it: the product
+    carries it as ``C.last_plan`` (a ``MultiplyPlan`` with per-candidate
+    predicted costs via ``.explain()`` and the executed blocked-path
+    stack statistics as ``.executor_stats``), and ``return_plan=True``
+    additionally returns ``(C, plan)``.  ``last_plan`` is a plain
+    host-side attribute — it does not survive pytree flatten/jit
+    round-trips (only ``data``/``layout``/``grid``/``block_mask`` do).
     """
     from .multiply import distributed_matmul
 
-    c_data = distributed_matmul(
+    c_data, plan = distributed_matmul(
         a.data, b.data, mesh=mesh, grid=a.grid,
         algorithm=algorithm, densify=densify,
         block_m=a.layout.block_rows, block_k=a.layout.block_cols,
         block_n=b.layout.block_cols,
-        a_mask=a.block_mask, b_mask=b.block_mask, **kw,
+        a_mask=a.block_mask, b_mask=b.block_mask, return_plan=True, **kw,
     )
     c_layout = BlockLayout(a.layout.rows, b.layout.cols,
                            a.layout.block_rows, b.layout.block_cols)
@@ -183,4 +200,6 @@ def multiply(
             a.layout.nblock_rows, a.layout.nblock_cols,
             b.layout.nblock_cols, a.block_mask, b.block_mask)
         mask = (am.astype(np.int64) @ bm.astype(np.int64)) > 0
-    return DBCSRMatrix(c_data, c_layout, a.grid, mask)
+    c = DBCSRMatrix(c_data, c_layout, a.grid, mask)
+    c.last_plan = plan
+    return (c, plan) if return_plan else c

@@ -1,11 +1,16 @@
 """Top-level distributed multiply dispatcher.
 
-Implements DBCSR's algorithm selection (paper section II): Cannon for
-general shapes, the tall-and-skinny algorithm when one dimension
-dominates, plus the beyond-paper 2.5D variant when a stack (pod) axis
-is available.  The local multiply is either 'densified' (one big GEMM
-— the paper's section III optimization, default for dense matrices) or
-'blocked' (stack-of-small-GEMMs via the smm kernel).
+Implements DBCSR's algorithm selection (paper section II): with
+``algorithm="auto"`` (the default) the cost-model planner
+(repro.planner.plan_multiply) evaluates every feasible candidate —
+Cannon / SUMMA / 2.5D Cannon / the tall-and-skinny variants, each with
+a densified or blocked local path — against calibrated hardware
+constants and picks the cheapest, which is the paper's driver
+behaviour (the "different sizes and shapes" headline).  A fixed
+``algorithm=`` string bypasses the planner entirely.  The local
+multiply is either 'densified' (one big GEMM — the paper's section III
+optimization) or 'blocked' (stack-of-small-GEMMs via the smm kernel);
+``densify=None`` leaves that choice to the planner too.
 
 Occupancy threading (blocked path): ``a_mask`` / ``b_mask`` are the
 *global* block-occupancy masks of the operands (host-side numpy bool).
@@ -34,7 +39,7 @@ from .cannon25d import cannon25d_matmul
 from .densify import blocked_local_matmul, densified_local_matmul
 from .stacks import normalize_block_masks
 from .summa import summa_matmul, summa_n_panels
-from .tall_skinny import classify_shape, tall_skinny_matmul
+from .tall_skinny import tall_skinny_matmul
 
 __all__ = ["distributed_matmul"]
 
@@ -189,6 +194,45 @@ def _masks_empty(mask_kwargs: dict) -> bool:
     return not bool(np.any(ua.any(axis=0) & ub.any(axis=1)))
 
 
+def _global_occupancy(
+    m: int, k: int, n: int,
+    block_m: int, block_k: int, block_n: int,
+    a_mask: Optional[np.ndarray], b_mask: Optional[np.ndarray],
+) -> float:
+    """Present-triple fraction of the global dense triple grid — the
+    occupancy the planner discounts blocked-path flops by.  An empty
+    mask product returns 0.0, which the planner short-circuits to a
+    trivial plan (the same contract as ``_masks_empty`` per step: the
+    blocked cost model must never divide by zero occupancy)."""
+    if a_mask is None and b_mask is None:
+        return 1.0
+    from .engine import _mask_fill
+
+    return _mask_fill(m // block_m, k // block_k, n // block_n,
+                      a_mask, b_mask, None)
+
+
+def _collect_executor_stats(lm, densify: bool) -> Optional[dict]:
+    """Executed-plan stack statistics for plan observability
+    (dbcsr.multiply exposes these as ``last_plan.executor_stats``)."""
+    if densify:
+        return None
+    if getattr(lm, "stepwise", False):
+        ex = [f.executor_plan for f in lm.step_executors if f is not None]
+        n_entries = sum(p.n_entries for p in ex)
+        n_dense = sum(p.n_dense_triples for p in ex)
+        return {
+            "n_steps": len(lm.step_executors),
+            "n_empty_steps": len(lm.empty_steps),
+            "n_entries": n_entries,
+            "n_dense_triples": n_dense,
+            "n_skipped_triples": n_dense - n_entries,
+            "occupancy": n_entries / n_dense if n_dense else 1.0,
+        }
+    plan = getattr(lm, "executor_plan", None)
+    return None if plan is None else plan.stats()
+
+
 def _stepwise_blocked_lm(
     ml: int, kl: int, nl: int, *, mask_steps: List[dict], **blocked_kw,
 ):
@@ -223,7 +267,7 @@ def distributed_matmul(
     mesh: jax.sharding.Mesh,
     grid: GridSpec = GridSpec(),
     algorithm: str = "auto",
-    densify: bool = True,
+    densify: Optional[bool] = None,
     block_m: int = 64,
     block_k: int = 64,
     block_n: int = 64,
@@ -234,34 +278,73 @@ def distributed_matmul(
     b_mask: Optional[np.ndarray] = None,
     precision=jax.lax.Precision.DEFAULT,
     double_buffer: bool = True,
+    return_plan: bool = False,
     **kw,
 ) -> jax.Array:
     """C = A @ B on the mesh. ``algorithm``:
 
-      auto         — DBCSR dispatch: shape-classify into cannon / ts_*
+      auto         — cost-model planner (repro.planner.plan_multiply):
+                     cheapest feasible (algorithm, local path) for this
+                     (shape, occupancy, mesh)
       cannon       — Cannon's algorithm (square grids)
       cannon25d    — 2.5D Cannon over grid.stack_axis
       ts_k|ts_m|ts_n — tall-and-skinny variants
       summa        — the ScaLAPACK-PDGEMM-style baseline
 
-    For the blocked path (``densify=False``) ``stack_size``/``align``
-    default to the smm autotune winners table for the block geometry
-    and occupancy bin.  ``a_mask`` / ``b_mask`` are *global* block
-    occupancy masks ((M/block_m, K/block_k) / (K/block_k, N/block_n)
-    numpy bool); the blocked path then plans only present triples per
-    data-exchange step and skips steps whose mask product is empty (see
-    module docstring).  The densified path ignores them (absent blocks
-    are zeros, the single big GEMM is already correct).
+    ``densify`` picks the local path (True: one big GEMM, False:
+    blocked stacks); ``None`` lets the planner decide under ``auto``
+    and means True for a fixed algorithm (the legacy default).  For the
+    blocked path ``stack_size``/``align`` default to the smm autotune
+    winners table for the block geometry and occupancy bin.  ``a_mask``
+    / ``b_mask`` are *global* block occupancy masks ((M/block_m,
+    K/block_k) / (K/block_k, N/block_n) numpy bool); the blocked path
+    then plans only present triples per data-exchange step and skips
+    steps whose mask product is empty (see module docstring).  The
+    densified path ignores them (absent blocks are zeros, the single
+    big GEMM is already correct).
+
+    ``return_plan=True`` returns ``(C, MultiplyPlan)`` where the plan
+    records the planner's decision (with per-candidate predicted costs,
+    see ``MultiplyPlan.explain()``) plus the executed blocked-path
+    stack statistics (``executor_stats``).  Only usable outside jit —
+    the plan is a host-side object.
     """
     m, k = a.shape
     k2, n = b.shape
     if k != k2:
         raise ValueError(f"inner dims disagree: {a.shape} @ {b.shape}")
 
-    if algorithm == "auto":
-        algorithm = classify_shape(m, k, n)
-        if algorithm == "cannon" and grid.stack_axis is not None:
-            algorithm = "cannon25d"
+    plan = None
+    if algorithm == "auto" or return_plan:
+        from repro.planner.plan import plan_multiply
+
+        pr0, pc0 = grid.grid_shape(mesh)
+        mesh_shape = ((pr0, pc0) if grid.stack_axis is None
+                      else (pr0, pc0, grid.stack_size(mesh)))
+        occ = _global_occupancy(m, k, n, block_m, block_k, block_n,
+                                a_mask, b_mask)
+        plan = plan_multiply(
+            m, k, n, blocks=(block_m, block_k, block_n),
+            mesh_shape=mesh_shape, occupancy=occ,
+            dtype=jnp.promote_types(a.dtype, b.dtype),
+            algorithm=None if algorithm == "auto" else algorithm,
+            # a fixed algorithm executes the legacy densified default
+            # when densify is unset — the plan must describe that, not
+            # the planner's own local-path preference
+            densify=(densify if algorithm == "auto" or densify is not None
+                     else True),
+            stack_size=stack_size, align=align)
+        if algorithm == "auto":
+            algorithm = plan.algorithm
+            if densify is None:
+                densify = plan.densify
+            if not densify:
+                if stack_size is None:
+                    stack_size = plan.stack_tile
+                if align is None:
+                    align = plan.align
+    if densify is None:
+        densify = True  # legacy default for fixed algorithms
     if algorithm not in ("cannon", "cannon25d", "ts_k", "ts_m", "ts_n",
                         "summa"):
         raise ValueError(f"unknown algorithm {algorithm!r}")
@@ -344,19 +427,25 @@ def distributed_matmul(
 
     # ---- data-exchange algorithm --------------------------------------
     if algorithm == "cannon":
-        return cannon_matmul(
+        c = cannon_matmul(
             a, b, mesh=mesh, grid=grid, local_matmul=lm,
             precision=precision, double_buffer=double_buffer, **kw)
-    if algorithm == "cannon25d":
-        return cannon25d_matmul(
+    elif algorithm == "cannon25d":
+        c = cannon25d_matmul(
             a, b, mesh=mesh, grid=grid, local_matmul=lm,
             precision=precision, double_buffer=double_buffer, **kw)
-    if algorithm in ("ts_k", "ts_m", "ts_n"):
-        return tall_skinny_matmul(
+    elif algorithm in ("ts_k", "ts_m", "ts_n"):
+        c = tall_skinny_matmul(
             a, b, mesh=mesh, grid=grid, mode=algorithm, local_matmul=lm,
             precision=precision, **kw)
-    if algorithm == "summa":
-        return summa_matmul(
+    else:
+        c = summa_matmul(
             a, b, mesh=mesh, grid=grid, local_matmul=lm,
             precision=precision, **kw)
-    raise ValueError(f"unknown algorithm {algorithm!r}")
+    if not return_plan:
+        return c
+    import dataclasses as _dc
+
+    plan = _dc.replace(plan, executor_stats=_collect_executor_stats(
+        lm, densify))
+    return c, plan

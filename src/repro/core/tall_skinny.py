@@ -35,15 +35,57 @@ from repro.compat import shard_map
 from .blocking import GridSpec
 from .cannon import _default_local_matmul
 
-__all__ = ["tall_skinny_matmul", "classify_shape"]
+__all__ = ["tall_skinny_matmul", "classify_shape", "ts_classify_ratio",
+           "DEFAULT_TS_RATIO"]
+
+# The historical hardcoded tall/skinny threshold.  The live threshold
+# is planner-owned (the cost-model crossover where tall-skinny's O(1)
+# communication beats Cannon's O(1/sqrt(P)) — see
+# repro.planner.cost_model.ts_crossover_ratio); this constant is the
+# fallback when the planner cannot produce one.
+DEFAULT_TS_RATIO = 8.0
+
+_RATIO_CACHE: float | None = None
 
 
-def classify_shape(m: int, k: int, n: int, ratio: float = 8.0) -> str:
+def ts_classify_ratio(refresh: bool = False) -> float:
+    """The dominance ratio at which ``classify_shape`` switches from
+    Cannon to a tall-skinny variant.
+
+    Exported so callers can inspect *why* a shape was classified
+    tall/skinny: a shape is ``ts_<dim>`` iff its largest dimension is at
+    least ``ts_classify_ratio()`` times each other dimension.  Computed
+    once per process from the planner's cost-model crossover (hardware
+    constants from repro.planner.calibrate), falling back to the legacy
+    ``DEFAULT_TS_RATIO`` when the planner is unavailable.
+    """
+    global _RATIO_CACHE
+    if _RATIO_CACHE is None or refresh:
+        try:
+            from repro.planner.cost_model import ts_crossover_ratio
+
+            _RATIO_CACHE = float(ts_crossover_ratio())
+        except Exception:
+            _RATIO_CACHE = DEFAULT_TS_RATIO
+    return _RATIO_CACHE
+
+
+def classify_shape(m: int, k: int, n: int,
+                   ratio: float | None = None) -> str:
     """Pick the data-exchange algorithm from the global shape.
 
     Mirrors DBCSR's dispatch: 'cannon' for general matrices,
-    'ts_k' / 'ts_m' / 'ts_n' when one dimension dominates.
+    'ts_k' / 'ts_m' / 'ts_n' when one dimension dominates by at least
+    ``ratio`` (default: the planner-owned ``ts_classify_ratio()``).
+
+    Note: ``distributed_matmul(algorithm="auto")`` no longer dispatches
+    through this shape heuristic alone — it evaluates the full
+    cost-model candidate space (repro.planner.plan_multiply), which
+    also accounts for occupancy, local path, and mesh geometry.  This
+    classifier remains the shape-only view of that decision.
     """
+    if ratio is None:
+        ratio = ts_classify_ratio()
     dims = {"m": m, "k": k, "n": n}
     big = max(dims, key=dims.get)
     others = [v for kk, v in dims.items() if kk != big]

@@ -146,20 +146,53 @@ def load_cache(path: str | None = None) -> Dict:
     return {}
 
 
+def best_params_meta(block_m: int, block_k: int, block_n: int,
+                     path: str | None = None, *,
+                     fill: float = 1.0) -> Dict:
+    """Winner lookup WITH provenance — the planner-facing entry point.
+
+    Returns ``{"align", "stack_tile", "source", "bin", "gflops"}``:
+    ``source`` records where the params came from
+    (``"winners[<key>]"`` — an occupancy-binned sweep entry,
+    ``"winners[<block>]"`` — dense-entry fallback for an unswept sparse
+    bin, or ``"heuristic"`` / ``"heuristic-nonuniform"``), and
+    ``gflops`` carries the sweep's measured throughput when recorded so
+    the planner's cost model (repro.planner.cost_model) can use the
+    per-geometry rate instead of a global constant.
+
+    The winners table is keyed on uniform block sizes (the paper's
+    regime); non-uniform geometries fall back to the heuristic: align
+    iff MXU padding would change the block shape.
+    """
+    b = fill_bin(fill)
+    if block_m == block_k == block_n:
+        cache = load_cache(path)
+        keys = [_cache_key(block_m, b)]
+        if b < 1.0:
+            keys.append(str(block_m))
+        for key in keys:
+            entry = cache.get(key)
+            if entry:
+                best = entry["best"]
+                return {"align": best["align"],
+                        "stack_tile": best["stack_tile"],
+                        "source": f"winners[{key}]", "bin": b,
+                        "gflops": best.get("gflops")}
+        return {"align": block_m % 8 != 0 or block_m % 128 != 0,
+                "stack_tile": 30000, "source": "heuristic", "bin": b,
+                "gflops": None}
+    align = mxu_pad_shape(block_m, block_k, block_n, True) != \
+        (block_m, block_k, block_n)
+    return {"align": align, "stack_tile": 30000,
+            "source": "heuristic-nonuniform", "bin": b, "gflops": None}
+
+
 def best_params(block: int, path: str | None = None, *,
                 fill: float = 1.0) -> Tuple[bool, int]:
     """Winner lookup used by callers; falls back through the dense
     entry (a sparse bin with no recorded sweep) to a sane default."""
-    cache = load_cache(path)
-    b = fill_bin(fill)
-    keys = [_cache_key(block, b)]
-    if b < 1.0:
-        keys.append(str(block))
-    for key in keys:
-        entry = cache.get(key)
-        if entry:
-            return entry["best"]["align"], entry["best"]["stack_tile"]
-    return (block % 8 != 0 or block % 128 != 0), 30000
+    meta = best_params_meta(block, block, block, path, fill=fill)
+    return meta["align"], meta["stack_tile"]
 
 
 def best_params_for(block_m: int, block_k: int, block_n: int,
@@ -169,17 +202,10 @@ def best_params_for(block_m: int, block_k: int, block_n: int,
     occupancy — the dispatch-path entry point (core/engine.py resolves
     ``align`` / ``stack_tile`` through this when the caller doesn't pin
     them, passing the plan's effective fill so sparse workloads get the
-    occupancy-binned winner).
-
-    The winners table is keyed on uniform block sizes (the paper's
-    regime); non-uniform geometries fall back to the heuristic: align
-    iff MXU padding would change the block shape.
+    occupancy-binned winner).  See ``best_params_meta`` for provenance.
     """
-    if block_m == block_k == block_n:
-        return best_params(block_m, path, fill=fill)
-    align = mxu_pad_shape(block_m, block_k, block_n, True) != \
-        (block_m, block_k, block_n)
-    return align, 30000
+    meta = best_params_meta(block_m, block_k, block_n, path, fill=fill)
+    return meta["align"], meta["stack_tile"]
 
 
 def main():

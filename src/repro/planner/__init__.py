@@ -1,0 +1,25 @@
+"""Cost-model-driven multiply planner (the paper's driver layer).
+
+    from repro.planner import plan_multiply
+    plan = plan_multiply(4096, 4096, 4096, blocks=(64, 64, 64),
+                         mesh_shape=(4, 4), occupancy=0.2)
+    print(plan.explain())
+
+``distributed_matmul(algorithm="auto")`` and ``dbcsr.multiply`` route
+through ``plan_multiply``; ``calibrate`` fits the cost-model constants
+from measured artifacts.
+"""
+from .cost_model import (ALGORITHMS, DEFAULT_HARDWARE, CandidateCost,
+                         HardwareModel, Problem, candidate_cost,
+                         enumerate_candidates, ts_crossover_ratio)
+from .calibrate import get_hardware_model, micro_calibrate, save_calibration
+from .plan import (MultiplyPlan, plan_cache_clear, plan_cache_info,
+                   plan_multiply)
+
+__all__ = [
+    "ALGORITHMS", "DEFAULT_HARDWARE", "CandidateCost", "HardwareModel",
+    "Problem", "candidate_cost", "enumerate_candidates",
+    "ts_crossover_ratio", "get_hardware_model", "micro_calibrate",
+    "save_calibration", "MultiplyPlan", "plan_cache_clear",
+    "plan_cache_info", "plan_multiply",
+]

@@ -1,0 +1,416 @@
+"""Analytic per-algorithm cost models for the multiply planner.
+
+The paper's driver layer wins ("up to 2.5x over optimized PDGEMM for
+matrices of different sizes and shapes") because it picks the right
+decomposition per problem, not because any single kernel is fastest.
+The communication-volume models here follow the 2.5D companion paper
+(Lazzaro et al., arXiv:1705.10218, section 3) specialised to the four
+data-exchange algorithms this repo implements:
+
+  cannon      (m*k + k*n) * e / pg   bytes/device over pg shift steps
+  cannon25d   cannon / c shift volume + one C reduction, at the cost of
+              c-fold operand replication memory (the classic
+              communication-avoiding trade; infeasible when the
+              replicas do not fit ``mem_bytes``)
+  summa       2*(m*k/pr + k*n/pc)*e  (masked-allreduce panel broadcast
+              moves ~2x the optimal bcast volume — the baseline's
+              handicap that benchmarks/bench_vs_pgemm.py measures)
+  ts_*        O(1) in P: one (m, n) partial reduction (ts_k) or one
+              operand replication bcast (ts_m / ts_n); per the paper
+              the big dimension's operand is assumed already sharded.
+
+Local-path costs:
+
+  densified   full 2*m*k*n flops at the big-GEMM rate (absent blocks
+              are stored zeros, so occupancy does NOT discount flops)
+              plus the densify/undensify copy.
+  blocked     only present triples dispatch: flops are discounted by
+              the triple occupancy, padded up to whole ``stack_tile``
+              scan rows (the executor's real dispatch shape), plus a
+              per-entry scheduling overhead.  Occupancy zero is a
+              contract violation here — the caller (plan.py) must
+              short-circuit an empty mask product to a trivial plan
+              *before* any candidate is costed (this is where the old
+              divide-by-zero lived).
+
+Hardware constants live in ``HardwareModel``; defaults are documented
+below and overridden by ``repro.planner.calibrate`` from measured
+artifacts.  Every candidate evaluation bumps ``N_EVALS`` so tests (and
+the plan-cache contract) can prove a cached plan re-evaluates nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+__all__ = [
+    "HardwareModel",
+    "Problem",
+    "CandidateCost",
+    "DEFAULT_HARDWARE",
+    "candidate_cost",
+    "enumerate_candidates",
+    "feasible",
+    "ts_crossover_ratio",
+    "ALGORITHMS",
+]
+
+# bumped once per candidate_cost evaluation; the plan cache test
+# asserts this stays flat across a cache hit
+N_EVALS = 0
+
+ALGORITHMS = ("cannon", "cannon25d", "summa", "ts_k", "ts_m", "ts_n")
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """Calibratable hardware constants (all SI).
+
+    Defaults are fitted to this container's measured artifacts (see
+    ROADMAP "Planner" section for provenance):
+
+      flops_per_s         dense-GEMM rate; artifacts/bench/kernels.json
+                          dense_dot row (~127 GF/s CPU interpret)
+      smm_flops_per_s     blocked-stack rate; kernels.json smm_dispatch
+                          fused rows (~5-21 GF/s)
+      stack_entry_s       per-triple scheduling overhead; slope of
+                          t_sparse vs n_triples in
+                          artifacts/bench/sparse_smoke.json (~3 us)
+      bytes_per_s         interconnect bandwidth per device (host
+                          backend: effectively memcpy)
+      latency_s           per-collective dispatch latency (host backend
+                          ~0.2 ms; TPU ~1 us — calibration overrides)
+      densify_bytes_per_s densify/undensify copy bandwidth
+      mem_bytes           per-device memory capacity (gates 2.5D
+                          replication and ts_* operand replication)
+    """
+
+    flops_per_s: float = 1.25e11
+    smm_flops_per_s: float = 1.0e10
+    stack_entry_s: float = 3.0e-6
+    bytes_per_s: float = 1.0e10
+    latency_s: float = 2.0e-4
+    densify_bytes_per_s: float = 2.0e10
+    mem_bytes: float = 8.0e9
+
+    def replace(self, **kw) -> "HardwareModel":
+        return dataclasses.replace(self, **kw)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "HardwareModel":
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: float(v) for k, v in d.items() if k in names})
+
+
+DEFAULT_HARDWARE = HardwareModel()
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """Static description of one distributed multiply."""
+
+    m: int
+    k: int
+    n: int
+    block_m: int
+    block_k: int
+    block_n: int
+    occupancy: float        # present-triple fraction of the dense grid
+    itemsize: int           # operand dtype bytes
+    pr: int
+    pc: int
+    c_stack: int = 1        # available 2.5D replication (mesh stack axis)
+
+    @property
+    def p2d(self) -> int:
+        return self.pr * self.pc
+
+    @property
+    def p_all(self) -> int:
+        return self.pr * self.pc * self.c_stack
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateCost:
+    """Predicted cost of one (algorithm, local path) candidate."""
+
+    algorithm: str
+    densify: bool
+    c_repl: int
+    feasible: bool
+    reason: str             # infeasibility reason ("" when feasible)
+    comm_s: float
+    compute_s: float
+    overhead_s: float       # message latency + densify copies
+    mem_bytes: float
+    total_s: float
+
+    @property
+    def label(self) -> str:
+        path = "densified" if self.densify else "blocked"
+        c = f" c={self.c_repl}" if self.c_repl > 1 else ""
+        return f"{self.algorithm}+{path}{c}"
+
+
+def _infeasible(algorithm: str, densify: bool, c_repl: int,
+                reason: str) -> CandidateCost:
+    return CandidateCost(algorithm, densify, c_repl, False, reason,
+                         math.inf, math.inf, math.inf, math.inf, math.inf)
+
+
+def _local_geometry(prob: Problem, algorithm: str,
+                    c_repl: int) -> Tuple[Optional[str], tuple]:
+    """Per-step local-multiply (ml, kl, nl) and step count for the
+    algorithm, or an infeasibility reason."""
+    m, k, n = prob.m, prob.k, prob.n
+    pr, pc = prob.pr, prob.pc
+    if algorithm in ("cannon", "cannon25d"):
+        if pr != pc:
+            return f"square grid required, got {pr}x{pc}", ()
+        pg = pr
+        if m % pg or k % pg or n % pg:
+            return f"shape not divisible by grid side {pg}", ()
+        if algorithm == "cannon25d":
+            if c_repl < 2:
+                return "no replication axis", ()
+            if pg % c_repl:
+                return f"grid side {pg} % replication {c_repl} != 0", ()
+        steps = pg if algorithm == "cannon" else pg // c_repl
+        return None, (m // pg, k // pg, n // pg, steps)
+    if algorithm == "summa":
+        n_panels = math.lcm(pr, pc)
+        if m % pr or n % pc or k % n_panels:
+            return (f"shape not divisible by summa grid {pr}x{pc} "
+                    f"({n_panels} panels)", ())
+        return None, (m // pr, k // n_panels, n // pc, n_panels)
+    if algorithm in ("ts_k", "ts_m", "ts_n"):
+        p = prob.p_all
+        if algorithm == "ts_k":
+            # reduce_scatter (the dispatcher's default) also tiles the
+            # output's M over all devices
+            if k % p or m % p:
+                return f"k/m not divisible by {p} devices", ()
+            return None, (m, k // p, n, 1)
+        if algorithm == "ts_m":
+            if m % p:
+                return f"m not divisible by {p} devices", ()
+            return None, (m // p, k, n, 1)
+        if n % p:
+            return f"n not divisible by {p} devices", ()
+        return None, (m, k, n // p, 1)
+    return f"unknown algorithm {algorithm!r}", ()
+
+
+def _local_step_cost(hw: HardwareModel, prob: Problem, densify: bool,
+                     ml: int, kl: int, nl: int,
+                     stack_tile: Optional[int],
+                     smm_flops_per_s: Optional[float],
+                     union_ranks: int = 1):
+    """(compute_s, overhead_s, reason) of ONE local multiply step.
+
+    ``union_ranks`` models the SPMD-uniform plan contract
+    (core/multiply.py): each data-exchange step executes the UNION of
+    the present triples of every rank sharing the traced program, so
+    the executed occupancy is ``1 - (1 - occ)^R`` for R unioned ranks —
+    substantially above the global triple fill at moderate sparsity
+    (per-rank exact plans are future work, see ROADMAP).
+    """
+    e = prob.itemsize
+    if densify:
+        flops = 2.0 * ml * kl * nl
+        copy_bytes = (ml * kl + kl * nl + ml * nl) * e
+        return (flops / hw.flops_per_s,
+                copy_bytes / hw.densify_bytes_per_s, None)
+    bm, bk, bn = prob.block_m, prob.block_k, prob.block_n
+    if ml % bm or kl % bk or nl % bn:
+        return None, None, (f"local ({ml},{kl},{nl}) not divisible by "
+                            f"blocks ({bm},{bk},{bn})")
+    occ = prob.occupancy
+    if occ <= 0.0:
+        # the divide-by-zero the trivial-plan short-circuit exists for:
+        # an empty product has no blocked cost, the caller must not ask
+        raise ValueError(
+            "blocked-path cost undefined at zero occupancy; callers must "
+            "short-circuit an empty mask product to a trivial plan")
+    if occ < 1.0 and union_ranks > 1:
+        occ = 1.0 - (1.0 - occ) ** union_ranks
+    dense_triples = (ml // bm) * (kl // bk) * (nl // bn)
+    present = occ * dense_triples
+    # occupancy discounts the blocked path's flops — only present
+    # triples dispatch.  pad_plans pads stacks to the LONGEST stack (not
+    # to stack_tile), and greedy whole-run packing keeps that waste
+    # second-order, so padding is folded into stack_entry_s (the fitted
+    # slope of dispatch time over triple count) rather than modelled as
+    # whole-tile scans.  ``stack_tile`` still bounds stack count for the
+    # latency-free scan (no extra charge).
+    rate = smm_flops_per_s or hw.smm_flops_per_s
+    flops = present * 2.0 * bm * bk * bn
+    return (flops / rate + present * hw.stack_entry_s, 0.0, None)
+
+
+def candidate_cost(
+    hw: HardwareModel,
+    prob: Problem,
+    algorithm: str,
+    densify: bool,
+    c_repl: int = 1,
+    *,
+    stack_tile: Optional[int] = None,
+    smm_flops_per_s: Optional[float] = None,
+) -> CandidateCost:
+    """Predicted execution cost of one candidate configuration.
+
+    ``stack_tile`` / ``smm_flops_per_s`` let the planner thread the
+    occupancy-binned autotune winner (and its recorded throughput) into
+    the blocked-path model instead of the global constant.
+    """
+    global N_EVALS
+    N_EVALS += 1
+    e = prob.itemsize
+    reason, geom = _local_geometry(prob, algorithm, c_repl)
+    if reason is not None:
+        return _infeasible(algorithm, densify, c_repl, reason)
+    ml, kl, nl, steps = geom
+    # ranks whose present triples are unioned into one SPMD step plan
+    # (core/multiply.py mask slicing): every (replica, i, j) for cannon,
+    # the factored row x column unions for summa, all shards for ts_*
+    union_ranks = {"cannon": prob.pr * prob.pc,
+                   "cannon25d": prob.pr * prob.pc * c_repl,
+                   "summa": prob.pr * prob.pc}.get(algorithm, prob.p_all)
+    compute_1, overhead_1, reason = _local_step_cost(
+        hw, prob, densify, ml, kl, nl, stack_tile, smm_flops_per_s,
+        union_ranks)
+    if reason is not None:
+        return _infeasible(algorithm, densify, c_repl, reason)
+    compute_s = steps * compute_1
+    overhead_s = steps * overhead_1
+
+    # -- communication volume & message count (bytes per device) ------
+    if algorithm == "cannon":
+        comm_bytes = steps * (ml * kl + kl * nl) * e
+        messages = 2 * (steps + 1)          # skew + shifts, A and B
+        mem = (ml * kl + kl * nl + ml * nl) * e
+    elif algorithm == "cannon25d":
+        # per-replica: 1/c of the shifts, plus one partial-C reduction
+        # over the stack axis (f32 partials); paper-model accounting
+        # charges the c-fold operand replication to memory
+        comm_bytes = steps * (ml * kl + kl * nl) * e + 2.0 * ml * nl * 4
+        messages = 2 * (steps + 1) + max(c_repl.bit_length() - 1, 1)
+        mem = c_repl * (ml * kl + kl * nl) * e + ml * nl * e
+    elif algorithm == "summa":
+        # masked-allreduce broadcast moves ~2x the optimal panel volume
+        comm_bytes = 2.0 * steps * (ml * kl + kl * nl) * e
+        messages = 2 * steps
+        mem = (prob.m * prob.k + prob.k * prob.n) / prob.p2d * e \
+            + ml * nl * e
+    elif algorithm == "ts_k":
+        # one reduce_scatter of the (m, n) f32 partial product: O(1) in
+        # P — a *synchronizing* collective with a data dependency on the
+        # local compute, so it pays message latency; operands reshard
+        # from the canonical P(row, col) layout to the K-sharded layout
+        # (~1/P of each operand received per device)
+        p = prob.p_all
+        comm_bytes = prob.m * prob.n * 4.0 \
+            + (prob.m * prob.k + prob.k * prob.n) * e / p
+        messages = max(p.bit_length() - 1, 1)
+        mem = (ml * kl + kl * nl + ml * nl) * e
+    elif algorithm == "ts_m":
+        # zero-communication compute once B is replicated; the input
+        # movement is the full-B broadcast plus A's reshard (~1/P) —
+        # prefetchable, so it pays volume but little latency
+        p = prob.p_all
+        comm_bytes = prob.k * prob.n * e + prob.m * prob.k * e / p
+        messages = 1
+        mem = (ml * kl + kl * nl + ml * nl) * e
+    else:  # ts_n
+        p = prob.p_all
+        comm_bytes = prob.m * prob.k * e + prob.k * prob.n * e / p
+        messages = 1
+        mem = (ml * kl + kl * nl + ml * nl) * e
+
+    comm_s = comm_bytes / hw.bytes_per_s
+    overhead_s += messages * hw.latency_s
+    total = comm_s + compute_s + overhead_s
+    if mem > hw.mem_bytes:
+        # geometry works but the replicas/shards don't fit: infeasible,
+        # yet the totals stay finite so a caller with NO feasible
+        # candidate can still fall back to the least-bad configuration
+        return CandidateCost(
+            algorithm, densify, c_repl, False,
+            f"needs {mem / 1e9:.2f} GB/device > {hw.mem_bytes / 1e9:.2f} GB",
+            comm_s, compute_s, overhead_s, mem, total)
+    return CandidateCost(algorithm, densify, c_repl, True, "",
+                         comm_s, compute_s, overhead_s, mem, total)
+
+
+def feasible(prob: Problem, algorithm: str, densify: bool,
+             c_repl: int = 1) -> bool:
+    """Divisibility/geometry feasibility only — no cost evaluation (and
+    no ``N_EVALS`` bump), usable at zero occupancy for trivial plans."""
+    reason, geom = _local_geometry(prob, algorithm, c_repl)
+    if reason is not None:
+        return False
+    if not densify:
+        ml, kl, nl = geom[0], geom[1], geom[2]
+        if ml % prob.block_m or kl % prob.block_k or nl % prob.block_n:
+            return False
+    return True
+
+
+def enumerate_candidates(
+    hw: HardwareModel,
+    prob: Problem,
+    algorithm: Optional[str] = None,
+    densify: Optional[bool] = None,
+    *,
+    stack_tile: Optional[int] = None,
+    smm_flops_per_s: Optional[float] = None,
+) -> Tuple[CandidateCost, ...]:
+    """Cost every candidate in the (algorithm x local-path x c) space,
+    optionally constrained to a forced algorithm / local path."""
+    algos = ALGORITHMS if algorithm is None else (algorithm,)
+    paths = (True, False) if densify is None else (bool(densify),)
+    out = []
+    for algo in algos:
+        crs = ((prob.c_stack,) if prob.c_stack > 1 else (1,)) \
+            if algo == "cannon25d" else (1,)
+        for cr in crs:
+            for dens in paths:
+                out.append(candidate_cost(
+                    hw, prob, algo, dens, cr, stack_tile=stack_tile,
+                    smm_flops_per_s=smm_flops_per_s))
+    return tuple(out)
+
+
+def ts_crossover_ratio(hw: Optional[HardwareModel] = None,
+                       p_total: int = 16, base: int = 4096,
+                       itemsize: int = 4) -> float:
+    """Shape ratio at which the tall-skinny algorithm's O(1) volume
+    beats Cannon's O(1/sqrt(P)) under the cost model — the planner-owned
+    replacement for ``classify_shape``'s historical hardcoded 8.0.
+
+    Scans k/m over [1, 64] for the canonical (base, r*base, base)
+    problem on a sqrt(p_total) square grid and returns the first ratio
+    where ts_k is predicted cheaper; clamped to [2, 64], falling back
+    to the legacy constant when the model never crosses over.
+    """
+    if hw is None:
+        from .calibrate import get_hardware_model  # no cycle: lazy
+
+        hw = get_hardware_model()
+    pg = max(int(math.isqrt(p_total)), 1)
+    try:
+        for r in range(1, 65):
+            prob = Problem(base, r * base, base, 64, 64, 64, 1.0,
+                           itemsize, pg, pg)
+            ts = candidate_cost(hw, prob, "ts_k", True)
+            ca = candidate_cost(hw, prob, "cannon", True)
+            if ts.feasible and ca.feasible and ts.total_s < ca.total_s:
+                return float(min(max(r, 2), 64))
+    except Exception:
+        pass
+    return 8.0  # legacy constant (tall_skinny.DEFAULT_TS_RATIO)

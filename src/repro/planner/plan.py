@@ -1,0 +1,271 @@
+"""plan_multiply — pick (algorithm, local path, 2.5D replication,
+stack params) for one distributed multiply.
+
+This is the paper's driver behaviour made explicit: DBCSR's headline
+win over vendor PDGEMM comes from choosing the right decomposition per
+(shape, occupancy, mesh), and this module makes that choice the
+library default (``distributed_matmul(algorithm="auto")`` and
+``dbcsr.multiply`` route through here).
+
+The planner evaluates every feasible candidate through the analytic
+models in ``cost_model.py`` (constants from ``calibrate.py``), resolves
+the blocked path's ``align`` / ``stack_tile`` through the
+occupancy-binned autotune winners table
+(``repro.kernels.smm.autotune.best_params_meta``), and memoizes the
+result in an LRU cache keyed on the full problem signature — a second
+identical call performs ZERO cost-model evaluations (asserted by
+tests/test_planner.py via ``cost_model.N_EVALS``).
+
+An empty mask product short-circuits to a trivial zero-cost plan
+*before* any candidate is costed: the blocked-path model divides by
+occupancy-derived quantities and must never see occupancy zero (the
+``_masks_empty`` contract shared with core/multiply.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .cost_model import (CandidateCost, HardwareModel, Problem,
+                         candidate_cost, enumerate_candidates, feasible)
+
+__all__ = ["MultiplyPlan", "plan_multiply", "plan_cache_info",
+           "plan_cache_clear"]
+
+_PLAN_CACHE_SIZE = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiplyPlan:
+    """The planner's decision for one multiply, plus its receipts.
+
+    ``candidates`` holds every evaluated configuration (feasible or
+    not) so ``explain()`` can show *why* the winner won.  After
+    execution, core/multiply.py attaches the executed blocked-path
+    stack statistics as ``executor_stats`` (a ``dataclasses.replace``
+    copy — cached plan objects stay stats-free).
+    """
+
+    algorithm: str
+    densify: bool
+    c_repl: int
+    align: Optional[bool]          # blocked path only, else None
+    stack_tile: Optional[int]      # blocked path only, else None
+    params_source: Optional[str]   # winners-table provenance
+    occupancy: float
+    predicted_s: float
+    trivial: bool
+    candidates: Tuple[CandidateCost, ...]
+    executor_stats: Optional[dict] = None
+
+    @property
+    def chosen(self) -> Optional[CandidateCost]:
+        for c in self.candidates:
+            if (c.algorithm == self.algorithm and c.densify == self.densify
+                    and c.c_repl == self.c_repl):
+                return c
+        return None
+
+    def explain(self) -> str:
+        """Human-readable per-candidate predicted costs."""
+        path = "densified" if self.densify else "blocked"
+        head = (f"plan: {self.algorithm} + {path}"
+                + (f" (c={self.c_repl})" if self.c_repl > 1 else "")
+                + f"  occupancy={self.occupancy:.3g}"
+                + f"  predicted={self.predicted_s * 1e3:.3g} ms")
+        if self.trivial:
+            return head + "  [trivial: empty mask product, nothing to do]"
+        if self.stack_tile is not None:
+            head += (f"\n  stack params: align={self.align} "
+                     f"stack_tile={self.stack_tile} [{self.params_source}]")
+        lines = [head,
+                 f"  {'candidate':26s} {'comm_ms':>9s} {'compute_ms':>11s} "
+                 f"{'overhead_ms':>12s} {'total_ms':>9s}"]
+        for c in sorted(self.candidates, key=lambda c: c.total_s):
+            star = "*" if c is self.chosen else " "
+            if c.feasible:
+                lines.append(
+                    f"{star} {c.label:26s} {c.comm_s * 1e3:9.3f} "
+                    f"{c.compute_s * 1e3:11.3f} {c.overhead_s * 1e3:12.3f} "
+                    f"{c.total_s * 1e3:9.3f}")
+            else:
+                lines.append(f"{star} {c.label:26s} {'-':>9s} {'-':>11s} "
+                             f"{'-':>12s} {'-':>9s}  infeasible: {c.reason}")
+        return "\n".join(lines)
+
+
+def _normalize_mesh_shape(mesh_shape) -> Tuple[int, int, int]:
+    t = tuple(int(x) for x in mesh_shape)
+    if len(t) == 2:
+        return t + (1,)
+    if len(t) == 3:
+        return t
+    raise ValueError(f"mesh_shape must be (pr, pc) or (pr, pc, c): {t}")
+
+
+def _trivial_plan(prob: Problem, algorithm: Optional[str],
+                  densify: Optional[bool]) -> MultiplyPlan:
+    """Empty mask product: nothing will be multiplied, so return a
+    zero-cost plan without costing any candidate (the blocked model
+    would divide by zero occupancy).  The blocked path is preferred —
+    its all-empty step plans skip every dispatch — falling back to
+    whatever geometry the mesh admits."""
+    if algorithm is not None:
+        order = [(algorithm, densify if densify is not None else False),
+                 (algorithm, True)]
+    else:
+        order = [(a, d) for d in (False, True)
+                 for a in ("cannon25d" if prob.c_stack > 1 else "cannon",
+                           "cannon", "summa", "ts_k", "ts_m", "ts_n")]
+    for algo, dens in order:
+        if feasible(prob, algo, dens, prob.c_stack if algo == "cannon25d"
+                    else 1):
+            return MultiplyPlan(
+                algorithm=algo, densify=bool(dens),
+                c_repl=prob.c_stack if algo == "cannon25d" else 1,
+                align=None, stack_tile=None, params_source=None,
+                occupancy=0.0, predicted_s=0.0, trivial=True,
+                candidates=())
+    # nothing fits (degenerate mesh/shape): let the executor raise its
+    # own loud error; report the densified fallback
+    return MultiplyPlan(algorithm=algorithm or "summa", densify=True,
+                        c_repl=1, align=None, stack_tile=None,
+                        params_source=None, occupancy=0.0, predicted_s=0.0,
+                        trivial=True, candidates=())
+
+
+def _winners_stamp():
+    """Content stamp of the autotune winners table; part of the plan
+    cache key so an in-process sweep (or a fresh table written by
+    bench/autotune runs) invalidates plans that baked in its params."""
+    import os
+
+    from repro.kernels.smm.autotune import DEFAULT_CACHE
+
+    try:
+        st = os.stat(DEFAULT_CACHE)
+        return (st.st_mtime_ns, st.st_size)
+    except OSError:
+        return None
+
+
+@functools.lru_cache(maxsize=_PLAN_CACHE_SIZE)
+def _plan_cached(
+    m: int, k: int, n: int,
+    block_m: int, block_k: int, block_n: int,
+    pr: int, pc: int, c_stack: int,
+    occupancy: float, itemsize: int,
+    algorithm: Optional[str], densify: Optional[bool],
+    stack_size: Optional[int], align: Optional[bool],
+    hw: HardwareModel,
+    winners_stamp=None,
+) -> MultiplyPlan:
+    prob = Problem(m, k, n, block_m, block_k, block_n, occupancy,
+                   itemsize, pr, pc, c_stack)
+
+    # stack params for the blocked candidates: the occupancy-binned
+    # autotune winner (and its recorded throughput, when the sweep ran
+    # on this container) feeds the model; caller pins win
+    from repro.kernels.smm.autotune import best_params_meta
+
+    meta = best_params_meta(block_m, block_k, block_n, fill=occupancy)
+    tuned_align = align if align is not None else meta["align"]
+    tuned_tile = stack_size if stack_size is not None else meta["stack_tile"]
+    smm_rate = (meta["gflops"] * 1e9) if meta.get("gflops") else None
+
+    candidates = enumerate_candidates(
+        hw, prob, algorithm, densify,
+        stack_tile=tuned_tile, smm_flops_per_s=smm_rate)
+    ranked = sorted([c for c in candidates if c.feasible],
+                    key=lambda c: c.total_s)
+    if not ranked:
+        # no fully-feasible candidate: fall back to the least-bad
+        # geometry-valid one (finite total = only the memory gate
+        # tripped); a forced configuration is honoured regardless (the
+        # executor raises its own loud error if it truly cannot run)
+        ranked = sorted([c for c in candidates
+                         if math.isfinite(c.total_s)],
+                        key=lambda c: c.total_s)
+    if ranked:
+        best = ranked[0]
+    elif algorithm is not None:
+        best = candidates[0]
+    else:
+        reasons = "; ".join(f"{c.label}: {c.reason}" for c in candidates)
+        raise ValueError(f"no feasible multiply candidate — {reasons}")
+
+    blocked = not best.densify
+    return MultiplyPlan(
+        algorithm=best.algorithm,
+        densify=best.densify,
+        c_repl=best.c_repl,
+        align=bool(tuned_align) if blocked else None,
+        stack_tile=int(tuned_tile) if blocked else None,
+        params_source=meta["source"] if blocked else None,
+        occupancy=occupancy,
+        predicted_s=best.total_s,
+        trivial=False,
+        candidates=candidates,
+    )
+
+
+def plan_multiply(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    blocks: Tuple[int, int, int] = (64, 64, 64),
+    mesh_shape=(1, 1),
+    occupancy: float = 1.0,
+    dtype=np.float32,
+    algorithm: Optional[str] = None,
+    densify: Optional[bool] = None,
+    stack_size: Optional[int] = None,
+    align: Optional[bool] = None,
+    hw: Optional[HardwareModel] = None,
+) -> MultiplyPlan:
+    """Choose how to run C = A @ B of global shape (m, k) x (k, n).
+
+    blocks      (block_m, block_k, block_n) of the blocked layout
+    mesh_shape  (pr, pc) process grid, or (pr, pc, c) with a 2.5D
+                stack/pod axis of size c
+    occupancy   present-triple fraction of the dense block-triple grid
+                (1.0 = dense; 0.0 = empty product -> trivial plan)
+    algorithm   force a data-exchange algorithm (None = planner's pick)
+    densify     force the local path (None = planner's pick)
+    stack_size/align  pin the blocked path's stack params (None = the
+                occupancy-binned autotune winner)
+    hw          cost-model constants (None = calibrate.get_hardware_model)
+
+    Results are LRU-cached on the full signature: a second identical
+    call returns the cached plan with zero cost-model evaluations.
+    """
+    pr, pc, c_stack = _normalize_mesh_shape(mesh_shape)
+    bm, bk, bn = (int(b) for b in blocks)
+    occ = float(occupancy)
+    if occ <= 0.0:
+        return _trivial_plan(
+            Problem(m, k, n, bm, bk, bn, 0.0, int(np.dtype(dtype).itemsize),
+                    pr, pc, c_stack),
+            algorithm, densify)
+    if hw is None:
+        from .calibrate import get_hardware_model
+
+        hw = get_hardware_model()
+    return _plan_cached(
+        int(m), int(k), int(n), bm, bk, bn, pr, pc, c_stack,
+        round(occ, 9), int(np.dtype(dtype).itemsize),
+        algorithm, None if densify is None else bool(densify),
+        stack_size, align, hw, _winners_stamp())
+
+
+def plan_cache_info():
+    return _plan_cached.cache_info()
+
+
+def plan_cache_clear() -> None:
+    _plan_cached.cache_clear()

@@ -14,7 +14,7 @@ from repro.core.blocking import (BlockLayout, GridSpec, morton_order,
                                  block_cyclic_owner, ceil_div)
 from repro.core.stacks import build_stacks, stack_statistics, STACK_SIZE
 from repro.core.densify import to_blocks, from_blocks, densify, undensify
-from repro.core.tall_skinny import classify_shape
+from repro.core.tall_skinny import classify_shape, ts_classify_ratio
 
 
 def test_block_layout_basics():
@@ -92,14 +92,26 @@ def test_to_from_blocks_roundtrip(nbr, nbc, bm, bn):
 @given(st.integers(32, 4096), st.integers(32, 4096), st.integers(32, 4096))
 @settings(max_examples=50, deadline=None)
 def test_classify_shape_properties(m, k, n):
+    # the threshold is planner-owned (cost-model crossover) and exported
+    # as ts_classify_ratio(); classification must agree with it exactly
+    ratio = ts_classify_ratio()
+    assert 2.0 <= ratio <= 64.0
     algo = classify_shape(m, k, n)
     dims = {"m": m, "k": k, "n": n}
     if algo.startswith("ts_"):
         big = algo[3:]
         others = [v for kk, v in dims.items() if kk != big]
-        assert dims[big] >= 8 * max(others)
+        assert dims[big] >= ratio * max(others)
     else:
         assert algo == "cannon"
+        big = max(dims, key=dims.get)
+        others = [v for kk, v in dims.items() if kk != big]
+        assert dims[big] < ratio * max(others)
+    # the legacy constant still works as an explicit override
+    assert classify_shape(m, k, n, ratio=8.0) == \
+        ("ts_" + max(dims, key=dims.get)
+         if max(dims.values()) >= 8.0 * sorted(dims.values())[1]
+         else "cannon")
 
 
 def test_classify_paper_shapes():
