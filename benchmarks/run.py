@@ -18,6 +18,8 @@ BENCHES = [
     ("IV-B blocked vs densified", "benchmarks.bench_densify"),
     ("block-sparse occupancy sweep", "benchmarks.bench_sparse"),
     ("multiply planner regret (auto vs fixed)", "benchmarks.bench_planner"),
+    ("schedule-engine pipeline depth (comm/compute overlap)",
+     "benchmarks.bench_overlap"),
     ("IV-C DBCSR vs PDGEMM(SUMMA)", "benchmarks.bench_vs_pgemm"),
     ("2.5D Cannon (pod-axis, beyond-paper)", "benchmarks.bench_25d"),
     ("roofline summary (from dry-run artifacts)", "benchmarks.bench_roofline"),

@@ -59,6 +59,23 @@ def main():
     #     cannon25d+densified     -         -           -           -
     #                           infeasible: no replication axis
     print(plan_multiply(n, n, n, mesh_shape=(4, 4)).explain())
+    # the executed plan also carries the schedule engine's per-step
+    # comm/compute split (core/schedule.py: pipeline_depth=2 overlaps
+    # step t+1's transfer with step t's multiply)
+    _, xplan = distributed_matmul(Ad, Bd, mesh=mesh, grid=grid,
+                                  return_plan=True)
+    ss = xplan.schedule_stats
+    print(f"  schedule: {ss['algorithm']} x {ss['n_steps']} steps "
+          f"(depth {ss['pipeline_depth']}, comm op: {ss['comm_op']})")
+    for st in ss["steps"]:
+        tag = "skip" if st["skipped"] else "    "
+        print(f"    step {st['step']:2d} {tag} "
+              f"comm {st['comm_s'] * 1e3:7.3f} ms "
+              f"({st['comm_bytes'] / 1e6:6.2f} MB)  "
+              f"compute {st['compute_s'] * 1e3:7.3f} ms")
+    print(f"    totals: comm {ss['comm_s'] * 1e3:.3f} ms, compute "
+          f"{ss['compute_s'] * 1e3:.3f} ms, overlappable bound "
+          f"{ss['overlap_bound_s'] * 1e3:.3f} ms")
     c1, t_auto = timed("auto (planner)", jax.jit(
         lambda a, b: distributed_matmul(a, b, mesh=mesh, grid=grid)), Ad, Bd)
     c2, t_summa = timed("SUMMA (PDGEMM baseline)", jax.jit(

@@ -23,3 +23,9 @@ python benchmarks/bench_sparse.py --smoke --check
 # the best fixed (algorithm, local-path) choice at every sweep point
 # (artifacts/bench/planner_smoke.json)
 python benchmarks/bench_planner.py --smoke --check
+
+# schedule engine: pipeline_depth 1 vs 2 for cannon/summa/cannon25d —
+# the double-buffered driver must never lose to the serial one beyond
+# the jitter floor, and the measured per-algorithm overlap constants
+# feed the planner calibration (artifacts/bench/overlap_smoke.json)
+python benchmarks/bench_overlap.py --smoke --check

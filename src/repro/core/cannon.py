@@ -11,9 +11,16 @@ TPU adaptation notes (see DESIGN.md §2):
     and B((i+j)%P, j)) is one joint-axis ppermute over the flattened
     (row, col) axes.
   * Communication/computation overlap (paper: MPI/CUDA-stream double
-    buffering) is expressed by issuing the ppermute for step t+1
-    *before* the local dot of step t; XLA schedules the
-    collective-permute-start/done pair around the dot.
+    buffering) is owned by the schedule engine (core/schedule.py): at
+    ``pipeline_depth=2`` the ppermute for step t+1 is issued against a
+    second buffer *before* the local multiply of step t, and XLA
+    schedules the collective-permute-start/done pair around the dot.
+
+This module is a pure *schedule builder* plus the shard_map wrapper:
+``build_cannon_schedule`` emits the step sequence (skew prologue,
+identity recv, neighbour-shift carry update), ``cannon_step_masks``
+emits the per-step occupancy-mask slices, and the unified driver
+(``schedule.execute_schedule``) runs the loop.
 
 The local multiply is pluggable (``local_matmul``): ``densified`` uses a
 single large dot (paper section III — the cuBLAS path), ``blocked``
@@ -22,18 +29,20 @@ analogue).
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+import numpy as np
+from jax.sharding import PartitionSpec as P
 
-from repro.compat import pvary, shard_map
+from repro.compat import shard_map
 
 from .blocking import GridSpec
+from .schedule import (RolledSpec, Schedule, execute_schedule,
+                       resolve_pipeline_depth)
 
-__all__ = ["cannon_matmul", "cannon_local_steps"]
+__all__ = ["cannon_matmul", "build_cannon_schedule", "cannon_step_masks"]
 
 
 def _skew_perm(pg: int, which: str):
@@ -59,79 +68,113 @@ def _shift_perm(pg: int):
     return [(k, (k - 1) % pg) for k in range(pg)]
 
 
-def cannon_local_steps(
-    a_blk: jax.Array,
-    b_blk: jax.Array,
-    *,
+def build_cannon_schedule(
     pg: int,
+    *,
     row_axis: str,
     col_axis: str,
-    local_matmul: Callable[[jax.Array, jax.Array], jax.Array],
-    out_dtype,
     skew: bool = True,
-    double_buffer: bool = True,
     steps: Optional[int] = None,
     step_offset: int = 0,
-):
-    """Body of Cannon's algorithm (runs inside shard_map).
+    empty_steps: frozenset = frozenset(),
+    local_shape: Optional[tuple] = None,
+    itemsize: int = 4,
+) -> Schedule:
+    """Schedule for Cannon's algorithm on a ``pg`` x ``pg`` grid.
 
-    ``steps``/``step_offset`` support the 2.5D variant (cannon25d.py)
+    ``steps`` / ``step_offset`` support the 2.5D variant (cannon25d.py)
     where each replica executes a strided/offset subset of the shifts.
-
-    ``local_matmul`` may be *stepwise* (``local_matmul.stepwise`` is
-    truthy): it is then called as ``local_matmul(a, b, step=t)`` with
-    the 0-based shift index, and may return ``None`` to signal that the
-    step's occupancy-mask product is empty on every rank — the partial
-    accumulation is skipped (host-static and uniform across devices, so
-    SPMD-safe; the shifts themselves still run, later steps need them).
+    ``local_shape`` = (ml, kl, nl) of the per-device multiply fills the
+    observability byte counts (the callables never need it).
     """
-    if skew:
-        a_blk = jax.lax.ppermute(a_blk, (row_axis, col_axis), _skew_perm(pg, "a"))
-        b_blk = jax.lax.ppermute(b_blk, (row_axis, col_axis), _skew_perm(pg, "b"))
-    if step_offset:
-        # jump the k-phase forward by step_offset (2.5D replica offset)
-        shift_a = [(j, (j - step_offset) % pg) for j in range(pg)]
-        shift_b = [(i, (i - step_offset) % pg) for i in range(pg)]
-        a_blk = jax.lax.ppermute(a_blk, col_axis, shift_a)
-        b_blk = jax.lax.ppermute(b_blk, row_axis, shift_b)
-
     n_steps = pg if steps is None else steps
-    c_blk = jnp.zeros((a_blk.shape[0], b_blk.shape[1]), dtype=out_dtype)
     shift_a = _shift_perm(pg)
     shift_b = _shift_perm(pg)
-    stepwise = bool(getattr(local_matmul, "stepwise", False))
 
-    if double_buffer or stepwise:
-        # Unrolled: issue step t+1's permutes before step t's dot so XLA
-        # overlaps collective-permute with the local matmul.  Stepwise
-        # (occupancy-masked) local multiplies force this form: per-step
-        # plans are distinct host constants the rolled fori_loop body
-        # cannot express.
-        for t in range(n_steps):
-            if t < n_steps - 1:
-                a_nxt = jax.lax.ppermute(a_blk, col_axis, shift_a)
-                b_nxt = jax.lax.ppermute(b_blk, row_axis, shift_b)
-            part = (local_matmul(a_blk, b_blk, step=t) if stepwise
-                    else local_matmul(a_blk, b_blk))
-            if part is not None:
-                c_blk = c_blk + part.astype(out_dtype)
-            if t < n_steps - 1:
-                a_blk, b_blk = a_nxt, b_nxt
-    else:
-        # Rolled (fori_loop): smaller HLO, no overlap. Kept for ablation
-        # (EXPERIMENTS.md §Perf measures the overlap win from the HLO).
-        def body(_, carry):
-            a_c, b_c, c_c = carry
-            c_c = c_c + local_matmul(a_c, b_c).astype(out_dtype)
-            a_c = jax.lax.ppermute(a_c, col_axis, shift_a)
-            b_c = jax.lax.ppermute(b_c, row_axis, shift_b)
-            return a_c, b_c, c_c
+    def prologue(a_blk, b_blk):
+        if skew:
+            a_blk = jax.lax.ppermute(a_blk, (row_axis, col_axis),
+                                     _skew_perm(pg, "a"))
+            b_blk = jax.lax.ppermute(b_blk, (row_axis, col_axis),
+                                     _skew_perm(pg, "b"))
+        if step_offset:
+            # jump the k-phase forward by step_offset (2.5D replica offset)
+            off_a = [(j, (j - step_offset) % pg) for j in range(pg)]
+            off_b = [(i, (i - step_offset) % pg) for i in range(pg)]
+            a_blk = jax.lax.ppermute(a_blk, col_axis, off_a)
+            b_blk = jax.lax.ppermute(b_blk, row_axis, off_b)
+        return (a_blk, b_blk)
 
-        # the zero-init accumulator must enter the loop already marked
-        # varying over the grid axes (its per-step updates are)
-        c_blk = pvary(c_blk, (row_axis, col_axis))
-        _, _, c_blk = jax.lax.fori_loop(0, n_steps, body, (a_blk, b_blk, c_blk))
-    return c_blk
+    def shift(carry, t):
+        a_blk, b_blk = carry
+        return (jax.lax.ppermute(a_blk, col_axis, shift_a),
+                jax.lax.ppermute(b_blk, row_axis, shift_b))
+
+    def rolled_shift(carry):
+        return shift(carry, 0)
+
+    step_bytes = 0
+    prologue_bytes = 0
+    if local_shape is not None:
+        ml, kl, nl = local_shape
+        step_bytes = (ml * kl + kl * nl) * itemsize
+        prologue_bytes = step_bytes if (skew or step_offset) else 0
+
+    return Schedule(
+        algorithm="cannon",
+        n_steps=n_steps,
+        prologue=prologue,
+        shift=shift,
+        empty_steps=frozenset(empty_steps),
+        rolled=RolledSpec(shift=rolled_shift,
+                          vary_axes=(row_axis, col_axis)),
+        comm_op=f"ppermute(a:{col_axis}, b:{row_axis})",
+        prologue_comm_bytes=prologue_bytes,
+        # the final step receives no shift: n_steps - 1 shifts total
+        step_comm_bytes=tuple(
+            step_bytes if t + 1 < n_steps else 0 for t in range(n_steps)),
+    )
+
+
+def cannon_step_masks(
+    am: np.ndarray, bm: np.ndarray, pg: int, c_repl: int = 1,
+) -> List[np.ndarray]:
+    """Per-shift-step local pair-presence tensors for (2.5D) Cannon —
+    the schedule builder's per-step mask slices.
+
+    At inner step t, device (i, j) of replica p holds the A chunk
+    (i, q) and B chunk (q, j) with q = (i + j + p*spr + t) % pg.  The
+    returned (nbr_l, nbk_l, nbc_l) tensor for step t is the union over
+    all (p, i, j) of that rank's chunk-product presence — the tightest
+    plan every rank can share under SPMD.  Block-structured sparsity
+    (banded / block-diagonal operands) makes whole steps empty here,
+    which the schedule driver then skips.
+    """
+    nbr, nbk = am.shape
+    nbc = bm.shape[1]
+    if nbr % pg or nbk % pg or nbc % pg:
+        raise ValueError(
+            f"block grid ({nbr},{nbk},{nbc}) not divisible by cannon grid "
+            f"side {pg}")
+    if c_repl < 1 or pg % c_repl:
+        raise ValueError(f"grid side {pg} not divisible by replication {c_repl}")
+    lr, lk, lc = nbr // pg, nbk // pg, nbc // pg
+    spr = pg // c_repl  # shift steps each replica executes
+    out = []
+    for t in range(spr):
+        pair = np.zeros((lr, lk, lc), dtype=bool)
+        for p in range(c_repl):
+            off = t + p * spr
+            for i in range(pg):
+                for j in range(pg):
+                    q = (i + j + off) % pg
+                    ac = am[i * lr:(i + 1) * lr, q * lk:(q + 1) * lk]
+                    if not ac.any():
+                        continue
+                    bc = bm[q * lk:(q + 1) * lk, j * lc:(j + 1) * lc]
+                    pair |= ac[:, :, None] & bc[None, :, :]
+        out.append(pair)
+    return out
 
 
 def _default_local_matmul(precision):
@@ -151,7 +194,8 @@ def cannon_matmul(
     local_matmul: Optional[Callable] = None,
     out_dtype=None,
     precision=jax.lax.Precision.DEFAULT,
-    double_buffer: bool = True,
+    pipeline_depth: Optional[int] = None,
+    double_buffer: Optional[bool] = None,
     skew: bool = True,
 ) -> jax.Array:
     """C = A @ B with Cannon's algorithm on a square (row, col) grid.
@@ -163,25 +207,24 @@ def cannon_matmul(
     Per-device communication volume: (M*K + K*N) / P * sqrt(P) total
     over sqrt(P) steps == O(1/sqrt(P)) of the matrix size, the paper's
     scaling for general shapes.
+
+    ``pipeline_depth`` (see core/schedule.py): 2 = double-buffered
+    comm/compute overlap (default), 1 = serial, 0 = rolled fori_loop
+    ablation.  ``double_buffer`` is the legacy spelling (True -> 2,
+    False -> 0); ``pipeline_depth`` wins when both are given.
     """
     pg = grid.validate_square(mesh)
     if out_dtype is None:
         out_dtype = jnp.promote_types(a.dtype, b.dtype)
     lm = local_matmul or _default_local_matmul(precision)
+    depth = resolve_pipeline_depth(pipeline_depth, double_buffer)
+    sched = build_cannon_schedule(
+        pg, row_axis=grid.row_axis, col_axis=grid.col_axis, skew=skew,
+        empty_steps=getattr(lm, "empty_steps", frozenset()))
 
     def body(a_blk, b_blk):
-        c = cannon_local_steps(
-            a_blk,
-            b_blk,
-            pg=pg,
-            row_axis=grid.row_axis,
-            col_axis=grid.col_axis,
-            local_matmul=lm,
-            out_dtype=jnp.float32,
-            skew=skew,
-            double_buffer=double_buffer,
-        )
-        return c.astype(out_dtype)
+        return execute_schedule(sched, a_blk, b_blk, local_matmul=lm,
+                                out_dtype=out_dtype, pipeline_depth=depth)
 
     spec = P(grid.row_axis, grid.col_axis)
     fn = shard_map(body, mesh=mesh, in_specs=(spec, spec),

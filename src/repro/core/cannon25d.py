@@ -21,6 +21,10 @@ branches deadlock (all devices must issue the same collective
 sequence).  Instead the offset is folded into the initial skew as one
 *static* joint-axis ppermute over (stack, row, col): device (p, i, j)
 starts from A(i, (i + j + p*P/c) % P) and B((i + j + p*P/c) % P, j).
+
+The step loop itself is the unified schedule engine (core/schedule.py):
+``build_cannon25d_schedule`` composes the Cannon shift schedule with
+the fused-skew prologue and the stack-axis reduction epilogue.
 """
 from __future__ import annotations
 
@@ -33,9 +37,10 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 
 from .blocking import GridSpec
-from .cannon import cannon_local_steps, _default_local_matmul
+from .cannon import _default_local_matmul, build_cannon_schedule
+from .schedule import Schedule, execute_schedule, resolve_pipeline_depth
 
-__all__ = ["cannon25d_matmul"]
+__all__ = ["cannon25d_matmul", "build_cannon25d_schedule"]
 
 
 def _skew25d_perm(pg: int, c_repl: int, spr: int, which: str):
@@ -58,6 +63,61 @@ def _skew25d_perm(pg: int, c_repl: int, spr: int, which: str):
     return pairs
 
 
+def build_cannon25d_schedule(
+    pg: int,
+    c_repl: int,
+    *,
+    row_axis: str,
+    col_axis: str,
+    stack_axis: str,
+    reduce: str = "all_reduce",
+    empty_steps: frozenset = frozenset(),
+    local_shape: Optional[tuple] = None,
+    itemsize: int = 4,
+) -> Schedule:
+    """Schedule for 2.5D Cannon: the Cannon shift steps (1/c of them,
+    replica-offset via the fused-skew prologue) plus one partial-C
+    reduction over the stack axis as the epilogue."""
+    if pg % c_repl:
+        raise ValueError(f"grid side {pg} not divisible by replication {c_repl}")
+    spr = pg // c_repl  # steps per replica
+    base = build_cannon_schedule(
+        pg, row_axis=row_axis, col_axis=col_axis, skew=False, steps=spr,
+        empty_steps=empty_steps, local_shape=local_shape, itemsize=itemsize)
+    axes3 = (stack_axis, row_axis, col_axis)
+
+    def prologue(a_blk, b_blk):
+        # fused skew + replica offset: one static joint-axis ppermute
+        a_blk = jax.lax.ppermute(a_blk, axes3,
+                                 _skew25d_perm(pg, c_repl, spr, "a"))
+        b_blk = jax.lax.ppermute(b_blk, axes3,
+                                 _skew25d_perm(pg, c_repl, spr, "b"))
+        return (a_blk, b_blk)
+
+    def epilogue(c_partial):
+        if reduce == "all_reduce":
+            return jax.lax.psum(c_partial, stack_axis)
+        if reduce == "reduce_scatter":
+            return jax.lax.psum_scatter(
+                c_partial, stack_axis, scatter_dimension=0, tiled=True)
+        raise ValueError(reduce)
+
+    prologue_bytes = epilogue_bytes = 0
+    if local_shape is not None:
+        ml, kl, nl = local_shape
+        prologue_bytes = (ml * kl + kl * nl) * itemsize
+        # partial C's reduce in f32 over the stack axis
+        epilogue_bytes = 2 * ml * nl * 4
+
+    return base.replace(
+        algorithm="cannon25d",
+        prologue=prologue,
+        epilogue=epilogue,
+        prologue_comm_bytes=prologue_bytes,
+        epilogue_comm_bytes=epilogue_bytes,
+    )
+
+
 def cannon25d_matmul(
     a: jax.Array,
     b: jax.Array,
@@ -67,7 +127,8 @@ def cannon25d_matmul(
     local_matmul: Optional[Callable] = None,
     out_dtype=None,
     precision=jax.lax.Precision.DEFAULT,
-    double_buffer: bool = True,
+    pipeline_depth: Optional[int] = None,
+    double_buffer: Optional[bool] = None,
     reduce: str = "all_reduce",  # or "reduce_scatter"
 ) -> jax.Array:
     """C = A @ B, 2.5D Cannon with replication over ``grid.stack_axis``.
@@ -75,44 +136,24 @@ def cannon25d_matmul(
     A, B enter 2D-sharded over (row, col) and replicated over the stack
     axis — spec P(row, col).  C leaves with the same spec (all_reduce)
     or additionally row-sharded over the stack axis (reduce_scatter).
+    ``pipeline_depth`` follows core/schedule.py semantics.
     """
     if grid.stack_axis is None:
         raise ValueError("cannon25d needs grid.stack_axis (e.g. 'pod')")
     pg = grid.validate_square(mesh)
     c_repl = grid.stack_size(mesh)
-    if pg % c_repl:
-        raise ValueError(f"grid side {pg} not divisible by replication {c_repl}")
-    spr = pg // c_repl  # steps per replica
     if out_dtype is None:
         out_dtype = jnp.promote_types(a.dtype, b.dtype)
     lm = local_matmul or _default_local_matmul(precision)
-    axes3 = (grid.stack_axis, grid.row_axis, grid.col_axis)
+    depth = resolve_pipeline_depth(pipeline_depth, double_buffer)
+    sched = build_cannon25d_schedule(
+        pg, c_repl, row_axis=grid.row_axis, col_axis=grid.col_axis,
+        stack_axis=grid.stack_axis, reduce=reduce,
+        empty_steps=getattr(lm, "empty_steps", frozenset()))
 
     def body(a_blk, b_blk):
-        # fused skew + replica offset: one static joint-axis ppermute
-        a_blk = jax.lax.ppermute(a_blk, axes3, _skew25d_perm(pg, c_repl, spr, "a"))
-        b_blk = jax.lax.ppermute(b_blk, axes3, _skew25d_perm(pg, c_repl, spr, "b"))
-        c_partial = cannon_local_steps(
-            a_blk,
-            b_blk,
-            pg=pg,
-            row_axis=grid.row_axis,
-            col_axis=grid.col_axis,
-            local_matmul=lm,
-            out_dtype=jnp.float32,
-            skew=False,           # already done (with the pod offset)
-            double_buffer=double_buffer,
-            steps=spr,
-        )
-        if reduce == "all_reduce":
-            c_blk = jax.lax.psum(c_partial, grid.stack_axis)
-        elif reduce == "reduce_scatter":
-            c_blk = jax.lax.psum_scatter(
-                c_partial, grid.stack_axis, scatter_dimension=0, tiled=True
-            )
-        else:
-            raise ValueError(reduce)
-        return c_blk.astype(out_dtype)
+        return execute_schedule(sched, a_blk, b_blk, local_matmul=lm,
+                                out_dtype=out_dtype, pipeline_depth=depth)
 
     spec2d = P(grid.row_axis, grid.col_axis)
     if reduce == "all_reduce":

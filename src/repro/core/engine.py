@@ -102,13 +102,19 @@ def _resolve_process(kernel: str):
 class ExecutorPlan:
     """Static (host-side) description of one fused stack execution.
 
-    ``triples`` is the padded ``(n_stacks, stack_tile, 4)`` int32 tensor
-    of ``(a_idx, b_idx, c_idx, valid)`` rows; see ``stacks.pad_plans``
-    for the padding contract.  ``plans`` keeps the original ragged
-    ``StackPlan``s for statistics and the legacy looped dispatch.
+    ``bin_triples`` holds one padded ``(n_stacks_b, tile_b, 4)`` int32
+    tensor of ``(a_idx, b_idx, c_idx, valid)`` rows per *stack-length
+    bin* (see ``stacks.pad_plans`` for the padding contract).  Dense
+    plans have uniform stack sizes and collapse to a single bin —
+    bit-identical to the historical single-tensor layout.  Ragged
+    (low-fill) plans are size-binned so short stacks stop being padded
+    to the longest stack: the executor runs one ``lax.scan`` per bin,
+    cutting padding FLOPs at low occupancy (the ROADMAP stack-executor
+    item).  ``plans`` keeps the original ragged ``StackPlan``s for
+    statistics and the legacy looped dispatch.
     """
 
-    triples: np.ndarray
+    bin_triples: Tuple[np.ndarray, ...]
     n_c_blocks: int
     block_m: int
     block_k: int
@@ -119,12 +125,25 @@ class ExecutorPlan:
     plans: Tuple[StackPlan, ...]
 
     @property
+    def triples(self) -> np.ndarray:
+        """Legacy single-tensor view: the padded ``(n_stacks,
+        stack_tile, 4)`` layout the executor used before size-binning
+        (and still uses whenever stack sizes are uniform)."""
+        if len(self.bin_triples) == 1:
+            return self.bin_triples[0]
+        return pad_plans(list(self.plans))
+
+    @property
+    def n_bins(self) -> int:
+        return len(self.bin_triples)
+
+    @property
     def n_stacks(self) -> int:
-        return int(self.triples.shape[0])
+        return sum(int(t.shape[0]) for t in self.bin_triples)
 
     @property
     def stack_tile(self) -> int:
-        return int(self.triples.shape[1])
+        return max(int(t.shape[1]) for t in self.bin_triples)
 
     @property
     def n_entries(self) -> int:
@@ -132,6 +151,15 @@ class ExecutorPlan:
 
     @property
     def n_padding(self) -> int:
+        """Padding rows actually dispatched (size-binned layout)."""
+        return sum(int(t.shape[0] * t.shape[1])
+                   for t in self.bin_triples) - self.n_entries
+
+    @property
+    def n_padding_unbinned(self) -> int:
+        """Padding rows the pre-binning layout (every stack padded to
+        the longest) would have dispatched — the baseline the
+        size-binned savings are measured against."""
         return self.n_stacks * self.stack_tile - self.n_entries
 
     @property
@@ -158,6 +186,18 @@ class ExecutorPlan:
         s["n_dense_triples"] = self.n_dense_triples
         s["n_skipped_triples"] = self.n_skipped_triples
         s["occupancy"] = self.occupancy
+        # size-binned padding accounting: the per-entry flop cost is
+        # identical for every (padding or real) row, so saved triples
+        # translate directly into saved padding FLOPs
+        flop_per_entry = 2 * self.block_m * self.block_k * self.block_n
+        s["n_bins"] = self.n_bins
+        s["n_padding"] = self.n_padding
+        s["n_padding_unbinned"] = self.n_padding_unbinned
+        s["padding_triples_saved"] = self.n_padding_unbinned - self.n_padding
+        s["padding_flops_saved"] = s["padding_triples_saved"] * flop_per_entry
+        if self.plans:
+            padded_total = self.n_entries + self.n_padding
+            s["fill"] = self.n_entries / padded_total if padded_total else 1.0
         return s
 
 
@@ -218,6 +258,46 @@ def build_executor_plan(
                 _STAGED_MASKS.pop(fp, None)
 
 
+# One lax.scan (and one traced kernel body) runs per stack-length bin,
+# so the bin count is capped: 4 bins bounds the extra traces while
+# capturing most of the padding win (stack sizes within a bin differ by
+# at most 2x).
+_MAX_SIZE_BINS = 4
+
+
+def _size_binned(plans: List[StackPlan]) -> Tuple[np.ndarray, ...]:
+    """Group stack plans into <= _MAX_SIZE_BINS power-of-two length bins
+    and pad each bin to its own longest stack (ragged-aware stack_tile).
+
+    Uniform stack sizes (the dense regime) collapse to a single bin
+    whose tensor is bit-identical to the historical ``pad_plans`` of
+    the whole plan list.  Binning never reorders entries *within* a
+    stack and never splits k-runs, and each C block lives in exactly
+    one stack, so cross-bin execution order cannot change any result.
+    """
+    sizes = [p.size for p in plans]
+    if len(set(sizes)) <= 1:
+        return (pad_plans(plans),)
+    # engage binning only when the single-tile layout wastes >= 25% of
+    # its dispatched rows on padding: a dense plan's short final stack
+    # is not worth a second scan trace, the low-fill regime (wildly
+    # ragged run lengths, oversized-run stacks) is
+    total_unbinned = len(plans) * max(sizes)
+    if 4 * (total_unbinned - sum(sizes)) < total_unbinned:
+        return (pad_plans(plans),)
+    keys = [max(s, 1).bit_length() for s in sizes]
+    shift = 0
+    while len(set(k >> shift for k in keys)) > _MAX_SIZE_BINS:
+        # halve the log-resolution until the bin count fits the cap
+        shift += 1
+    keys = [k >> shift for k in keys]
+    out = []
+    for key in sorted(set(keys)):
+        members = [p for p, kk in zip(plans, keys) if kk == key]
+        out.append(pad_plans(members))
+    return tuple(out)
+
+
 @functools.lru_cache(maxsize=_PLAN_CACHE_SIZE)
 def _build_executor_plan_cached(
     m: int,
@@ -239,13 +319,14 @@ def _build_executor_plan_cached(
         b_mask=None if b_fp is None else _STAGED_MASKS[b_fp],
         pair_mask=None if pair_fp is None else _STAGED_MASKS[pair_fp])
     if plans:
-        padded = pad_plans(plans)
+        bins = _size_binned(plans)
     else:
         # empty mask product: zero stacks, execute_plan is a no-op
-        padded = np.zeros((0, 1, 4), dtype=np.int32)
-    padded.setflags(write=False)  # memoized => shared; guard against mutation
+        bins = (np.zeros((0, 1, 4), dtype=np.int32),)
+    for t in bins:
+        t.setflags(write=False)  # memoized => shared; guard against mutation
     return ExecutorPlan(
-        triples=padded,
+        bin_triples=bins,
         n_c_blocks=a_layout.nblock_rows * b_layout.nblock_cols,
         block_m=block_m,
         block_k=block_k,
@@ -266,8 +347,9 @@ def execute_plan(
     kernel: str = "smm",
     align: bool = False,
 ) -> jax.Array:
-    """Run every stack of ``plan`` in one ``lax.scan``: the stack
-    processor is traced once, not once per stack.
+    """Run every stack of ``plan`` through ``lax.scan`` — one scan per
+    stack-length bin (dense plans have one bin), so the stack processor
+    is traced once per (block geometry, bin tile), never once per stack.
 
     A scratch C block is appended at index ``n_c_blocks`` to absorb the
     padding rows' (masked, zero) writes, and stripped from the result.
@@ -294,13 +376,15 @@ def execute_plan(
         align = False  # blocks are pre-aligned; steps run the raw kernel
     scratch = jnp.zeros((1,) + c_blocks.shape[1:], c_blocks.dtype)
     c = jnp.concatenate([c_blocks, scratch], axis=0)
-    stacked = jnp.asarray(plan.triples)
 
     def step(c_carry, stack_triples):
         return process(a_blocks, b_blocks, c_carry, stack_triples,
                        align=align), None
 
-    c, _ = jax.lax.scan(step, c, stacked)
+    # each C block's k-run lives in exactly one stack, so bin order
+    # cannot change any accumulation order (engine bit-identity)
+    for tensor in plan.bin_triples:
+        c, _ = jax.lax.scan(step, c, jnp.asarray(tensor))
     c = c[:-1]
     if c.shape[1:] != (bm, bn):
         c = c[:, :bm, :bn]

@@ -12,18 +12,28 @@ multiply is either 'densified' (one big GEMM — the paper's section III
 optimization) or 'blocked' (stack-of-small-GEMMs via the smm kernel);
 ``densify=None`` leaves that choice to the planner too.
 
+Every algorithm executes through the unified schedule engine
+(core/schedule.py): the algorithm module emits a step schedule (comm
+op, per-step mask slice, local multiply geometry) and the pipelined
+driver runs it with software double-buffering — ``pipeline_depth=2``
+(default) issues the ppermute / panel broadcast for step t+1 while
+step t's stacks execute, ``pipeline_depth=1`` is strictly serial with
+bit-identical output.
+
 Occupancy threading (blocked path): ``a_mask`` / ``b_mask`` are the
 *global* block-occupancy masks of the operands (host-side numpy bool).
 For every data-exchange step of the chosen algorithm — each cannon
-shift, each summa panel — this module slices the global masks down to
-the block ranges every mesh rank holds at that step and unions them
-over ranks (shard_map traces ONE program for all devices, so the
-per-step plan must cover every rank's present triples; the union is
-the tightest SPMD-uniform plan).  Plans are memoized per shifted-mask
-content fingerprint (core/engine.py), and a step whose unioned mask
-product is empty skips its ``execute_plan`` — and for summa, the panel
-broadcast — entirely.  The densified path ignores the masks: absent
-blocks are stored as zeros, so one big GEMM is already correct.
+shift, each summa panel — the per-algorithm mask builders
+(``cannon_step_masks`` / ``summa_step_masks`` / ``ts_step_masks``)
+slice the global masks down to the block ranges every mesh rank holds
+at that step and union them over ranks (shard_map traces ONE program
+for all devices, so the per-step plan must cover every rank's present
+triples; the union is the tightest SPMD-uniform plan).  Plans are
+memoized per shifted-mask content fingerprint (core/engine.py), and a
+step whose unioned mask product is empty skips its ``execute_plan`` —
+and for summa, the panel broadcast — entirely.  The densified path
+ignores the masks: absent blocks are stored as zeros, so one big GEMM
+is already correct.
 """
 from __future__ import annotations
 
@@ -34,19 +44,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from .blocking import GridSpec
-from .cannon import cannon_matmul
-from .cannon25d import cannon25d_matmul
+from .cannon import build_cannon_schedule, cannon_matmul, cannon_step_masks
+from .cannon25d import build_cannon25d_schedule, cannon25d_matmul
 from .densify import blocked_local_matmul, densified_local_matmul
+from .schedule import resolve_pipeline_depth, schedule_step_meta
 from .stacks import normalize_block_masks
-from .summa import summa_matmul, summa_n_panels
-from .tall_skinny import tall_skinny_matmul
+from .summa import (build_summa_gather_schedule, build_summa_schedule,
+                    summa_gather_masks, summa_matmul, summa_n_panels,
+                    summa_step_masks)
+from .tall_skinny import build_ts_schedule, tall_skinny_matmul, ts_step_masks
 
 __all__ = ["distributed_matmul"]
-
-
-# ---------------------------------------------------------------------------
-# occupancy-mask slicing: global block masks -> per-step local plans
-# ---------------------------------------------------------------------------
 
 
 def _block_masks(
@@ -58,133 +66,6 @@ def _block_masks(
     operand is dense (all blocks present)."""
     return normalize_block_masks(m // block_m, k // block_k, n // block_n,
                                  a_mask, b_mask)
-
-
-def _cannon_pair_masks(
-    am: np.ndarray, bm: np.ndarray, pg: int, c_repl: int = 1,
-) -> List[np.ndarray]:
-    """Per-shift-step local pair-presence tensors for (2.5D) Cannon.
-
-    At inner step t, device (i, j) of replica p holds the A chunk
-    (i, q) and B chunk (q, j) with q = (i + j + p*spr + t) % pg.  The
-    returned (nbr_l, nbk_l, nbc_l) tensor for step t is the union over
-    all (p, i, j) of that rank's chunk-product presence — the tightest
-    plan every rank can share under SPMD.  Block-structured sparsity
-    (banded / block-diagonal operands) makes whole steps empty here,
-    which cannon_local_steps then skips.
-    """
-    nbr, nbk = am.shape
-    nbc = bm.shape[1]
-    if nbr % pg or nbk % pg or nbc % pg:
-        raise ValueError(
-            f"block grid ({nbr},{nbk},{nbc}) not divisible by cannon grid "
-            f"side {pg}")
-    if c_repl < 1 or pg % c_repl:
-        raise ValueError(f"grid side {pg} not divisible by replication {c_repl}")
-    lr, lk, lc = nbr // pg, nbk // pg, nbc // pg
-    spr = pg // c_repl  # shift steps each replica executes
-    out = []
-    for t in range(spr):
-        pair = np.zeros((lr, lk, lc), dtype=bool)
-        for p in range(c_repl):
-            off = t + p * spr
-            for i in range(pg):
-                for j in range(pg):
-                    q = (i + j + off) % pg
-                    ac = am[i * lr:(i + 1) * lr, q * lk:(q + 1) * lk]
-                    if not ac.any():
-                        continue
-                    bc = bm[q * lk:(q + 1) * lk, j * lc:(j + 1) * lc]
-                    pair |= ac[:, :, None] & bc[None, :, :]
-        out.append(pair)
-    return out
-
-
-def _summa_panel_masks(
-    am: np.ndarray, bm: np.ndarray, pr: int, pc: int, n_panels: int,
-) -> List[Tuple[np.ndarray, np.ndarray]]:
-    """Per-panel (a_mask, b_mask) unions for psum-broadcast SUMMA.
-
-    Panel p covers the global K block range [p*nbk/n_panels, ...); the
-    A-side union runs over the pr row chunks, the B-side over the pc
-    column chunks.  Because the row and column ranks vary independently,
-    the union of per-rank products equals the product of the factored
-    unions — no 3D pair tensor needed.
-    """
-    nbr, nbk = am.shape
-    nbc = bm.shape[1]
-    if nbr % pr or nbc % pc or nbk % n_panels:
-        raise ValueError(
-            f"block grid ({nbr},{nbk},{nbc}) not divisible by summa grid "
-            f"{pr}x{pc} with {n_panels} panels")
-    lr, lc, lkp = nbr // pr, nbc // pc, nbk // n_panels
-    out = []
-    for p in range(n_panels):
-        ksl = slice(p * lkp, (p + 1) * lkp)
-        ua = np.zeros((lr, lkp), dtype=bool)
-        for i in range(pr):
-            ua |= am[i * lr:(i + 1) * lr, ksl]
-        ub = np.zeros((lkp, lc), dtype=bool)
-        for j in range(pc):
-            ub |= bm[ksl, j * lc:(j + 1) * lc]
-        out.append((ua, ub))
-    return out
-
-
-def _summa_gather_masks(
-    am: np.ndarray, bm: np.ndarray, pr: int, pc: int,
-) -> Tuple[np.ndarray, np.ndarray]:
-    """Factored unions for PUMMA-style (all-gather) SUMMA: the local
-    multiply sees the full K extent, so there is a single step whose A
-    mask unions over row chunks and B mask over column chunks."""
-    nbr, nbk = am.shape
-    nbc = bm.shape[1]
-    if nbr % pr or nbc % pc:
-        raise ValueError(
-            f"block grid ({nbr},{nbc}) not divisible by grid {pr}x{pc}")
-    lr, lc = nbr // pr, nbc // pc
-    ua = np.zeros((lr, nbk), dtype=bool)
-    for i in range(pr):
-        ua |= am[i * lr:(i + 1) * lr]
-    ub = np.zeros((nbk, lc), dtype=bool)
-    for j in range(pc):
-        ub |= bm[:, j * lc:(j + 1) * lc]
-    return ua, ub
-
-
-def _ts_masks(algorithm: str, am: np.ndarray, bm: np.ndarray,
-              p_all: int) -> dict:
-    """Single-step mask kwargs for the tall-and-skinny variants (the
-    contraction/tall dimension is sharded over all p_all devices)."""
-    nbr, nbk = am.shape
-    nbc = bm.shape[1]
-    if algorithm == "ts_k":
-        if nbk % p_all:
-            raise ValueError(f"K block grid {nbk} not divisible by {p_all}")
-        lk = nbk // p_all
-        pair = np.zeros((nbr, lk, nbc), dtype=bool)
-        for d in range(p_all):
-            ac = am[:, d * lk:(d + 1) * lk]
-            if not ac.any():
-                continue
-            bc = bm[d * lk:(d + 1) * lk, :]
-            pair |= ac[:, :, None] & bc[None, :, :]
-        return {"pair_mask": pair}
-    if algorithm == "ts_m":
-        if nbr % p_all:
-            raise ValueError(f"M block grid {nbr} not divisible by {p_all}")
-        lr = nbr // p_all
-        ua = np.zeros((lr, nbk), dtype=bool)
-        for d in range(p_all):
-            ua |= am[d * lr:(d + 1) * lr]
-        return {"a_mask": ua, "b_mask": bm}
-    if nbc % p_all:
-        raise ValueError(f"N block grid {nbc} not divisible by {p_all}")
-    lc = nbc // p_all
-    ub = np.zeros((nbk, lc), dtype=bool)
-    for d in range(p_all):
-        ub |= bm[:, d * lc:(d + 1) * lc]
-    return {"a_mask": am, "b_mask": ub}
 
 
 def _masks_empty(mask_kwargs: dict) -> bool:
@@ -221,6 +102,8 @@ def _collect_executor_stats(lm, densify: bool) -> Optional[dict]:
         ex = [f.executor_plan for f in lm.step_executors if f is not None]
         n_entries = sum(p.n_entries for p in ex)
         n_dense = sum(p.n_dense_triples for p in ex)
+        n_padding = sum(p.n_padding for p in ex)
+        n_padding_unbinned = sum(p.n_padding_unbinned for p in ex)
         return {
             "n_steps": len(lm.step_executors),
             "n_empty_steps": len(lm.empty_steps),
@@ -228,6 +111,9 @@ def _collect_executor_stats(lm, densify: bool) -> Optional[dict]:
             "n_dense_triples": n_dense,
             "n_skipped_triples": n_dense - n_entries,
             "occupancy": n_entries / n_dense if n_dense else 1.0,
+            "n_padding": n_padding,
+            "n_padding_unbinned": n_padding_unbinned,
+            "padding_triples_saved": n_padding_unbinned - n_padding,
         }
     plan = getattr(lm, "executor_plan", None)
     return None if plan is None else plan.stats()
@@ -239,7 +125,7 @@ def _stepwise_blocked_lm(
     """A stepwise local multiply: one fused stack executor per data-
     exchange step (plans deduplicated by mask fingerprint through the
     engine memo).  Steps whose mask product is empty carry no executor;
-    callers (cannon_local_steps / summa_matmul) skip them host-side.
+    the schedule driver skips them host-side.
     """
     fns, empty = [], set()
     for t, mask_kwargs in enumerate(mask_steps):
@@ -260,6 +146,109 @@ def _stepwise_blocked_lm(
     return lm
 
 
+# ---------------------------------------------------------------------------
+# schedule observability: per-step comm/compute split
+# ---------------------------------------------------------------------------
+
+
+def _build_meta_schedule(algorithm: str, *, grid, mesh, local_shape,
+                         itemsize: int, empty_steps, reduce_kw: dict):
+    """Rebuild the executed schedule purely for its host-side metadata
+    (building a Schedule traces nothing — see core/schedule.py)."""
+    pr, pc = grid.grid_shape(mesh)
+    if algorithm == "cannon":
+        return build_cannon_schedule(
+            pr, row_axis=grid.row_axis, col_axis=grid.col_axis,
+            empty_steps=empty_steps, local_shape=local_shape,
+            itemsize=itemsize)
+    if algorithm == "cannon25d":
+        return build_cannon25d_schedule(
+            pr, grid.stack_size(mesh), row_axis=grid.row_axis,
+            col_axis=grid.col_axis, stack_axis=grid.stack_axis,
+            reduce=reduce_kw.get("reduce", "all_reduce"),
+            empty_steps=empty_steps, local_shape=local_shape,
+            itemsize=itemsize)
+    if algorithm == "summa":
+        if reduce_kw.get("bcast") == "gather":
+            return build_summa_gather_schedule(
+                grid.row_axis, grid.col_axis, local_shape=local_shape,
+                itemsize=itemsize)
+        return build_summa_schedule(
+            pr, pc, row_axis=grid.row_axis, col_axis=grid.col_axis,
+            empty_steps=empty_steps, local_shape=local_shape,
+            itemsize=itemsize)
+    axes = ((grid.row_axis, grid.col_axis) if grid.stack_axis is None
+            else (grid.stack_axis, grid.row_axis, grid.col_axis))
+    return build_ts_schedule(
+        algorithm, axes, reduce=reduce_kw.get("reduce", "reduce_scatter"),
+        local_shape=local_shape, itemsize=itemsize)
+
+
+def _schedule_stats(algorithm: str, *, grid, mesh, local_shape, itemsize,
+                    lm, densify: bool, pipeline_depth: int,
+                    reduce_kw: dict) -> dict:
+    """Per-step comm-vs-compute split of the executed schedule, priced
+    with the calibrated hardware constants (host-side observability —
+    attached to executed plans as ``schedule_stats``)."""
+    from repro.planner.calibrate import get_hardware_model
+
+    hw = get_hardware_model()
+    empty = getattr(lm, "empty_steps", frozenset())
+    sched = _build_meta_schedule(
+        algorithm, grid=grid, mesh=mesh, local_shape=local_shape,
+        itemsize=itemsize, empty_steps=empty, reduce_kw=reduce_kw)
+    meta = schedule_step_meta(sched)
+
+    ml, kl, nl = local_shape
+    dense_flops = 2.0 * ml * kl * nl
+    step_execs = getattr(lm, "step_executors", None)
+    steps = []
+    for t in range(meta["n_steps"]):
+        comm_bytes = meta["step_comm_bytes"][t]
+        plan = None
+        if not densify and t not in empty:
+            plan = (step_execs[t].executor_plan if step_execs is not None
+                    else getattr(lm, "executor_plan", None))
+        if t in empty:
+            flops = 0.0
+            compute_s = 0.0
+        elif plan is not None:
+            flops = 2.0 * plan.n_entries * plan.block_m * plan.block_k \
+                * plan.block_n
+            compute_s = flops / hw.smm_flops_per_s \
+                + plan.n_entries * hw.stack_entry_s
+        else:
+            flops = dense_flops
+            compute_s = flops / hw.flops_per_s
+        steps.append({
+            "step": t,
+            "skipped": t in empty,
+            "comm_bytes": comm_bytes,
+            "comm_s": comm_bytes / hw.bytes_per_s,
+            "flops": flops,
+            "compute_s": compute_s,
+        })
+    comm_s = sum(s["comm_s"] for s in steps)
+    compute_s = sum(s["compute_s"] for s in steps)
+    # at depth >= 2 the shift/broadcast feeding step t+1 hides behind
+    # step t's compute: all but the first step's comm is overlappable
+    overlappable = sum(s["comm_s"] for s in steps[:-1]) \
+        if meta["algorithm"] in ("cannon", "cannon25d") \
+        else sum(s["comm_s"] for s in steps[1:])
+    overlap_bound_s = (min(overlappable, compute_s)
+                       if pipeline_depth >= 2 and meta["n_steps"] > 1 else 0.0)
+    return {
+        **meta,
+        "pipeline_depth": pipeline_depth,
+        "steps": steps,
+        "comm_s": comm_s,
+        "compute_s": compute_s,
+        "prologue_comm_s": meta["prologue_comm_bytes"] / hw.bytes_per_s,
+        "epilogue_comm_s": meta["epilogue_comm_bytes"] / hw.bytes_per_s,
+        "overlap_bound_s": overlap_bound_s,
+    }
+
+
 def distributed_matmul(
     a: jax.Array,
     b: jax.Array,
@@ -277,7 +266,8 @@ def distributed_matmul(
     a_mask: Optional[np.ndarray] = None,
     b_mask: Optional[np.ndarray] = None,
     precision=jax.lax.Precision.DEFAULT,
-    double_buffer: bool = True,
+    pipeline_depth: Optional[int] = None,
+    double_buffer: Optional[bool] = None,
     return_plan: bool = False,
     **kw,
 ) -> jax.Array:
@@ -303,11 +293,18 @@ def distributed_matmul(
     densified path ignores them (absent blocks are zeros, the single
     big GEMM is already correct).
 
+    ``pipeline_depth`` (core/schedule.py): 2 = double-buffered
+    comm/compute overlap, 1 = serial (bit-identical output), 0 = rolled
+    fori_loop ablation; ``None`` takes the plan's depth under ``auto``
+    and the overlap default otherwise.  ``double_buffer`` is the legacy
+    spelling (True -> 2, False -> 0).
+
     ``return_plan=True`` returns ``(C, MultiplyPlan)`` where the plan
     records the planner's decision (with per-candidate predicted costs,
     see ``MultiplyPlan.explain()``) plus the executed blocked-path
-    stack statistics (``executor_stats``).  Only usable outside jit —
-    the plan is a host-side object.
+    stack statistics (``executor_stats``) and the per-step comm/compute
+    split of the executed schedule (``schedule_stats``).  Only usable
+    outside jit — the plan is a host-side object.
     """
     m, k = a.shape
     k2, n = b.shape
@@ -343,58 +340,62 @@ def distributed_matmul(
                     stack_size = plan.stack_tile
                 if align is None:
                     align = plan.align
+            if pipeline_depth is None and double_buffer is None:
+                pipeline_depth = plan.pipeline_depth
     if densify is None:
         densify = True  # legacy default for fixed algorithms
     if algorithm not in ("cannon", "cannon25d", "ts_k", "ts_m", "ts_n",
                         "summa"):
         raise ValueError(f"unknown algorithm {algorithm!r}")
+    depth = resolve_pipeline_depth(pipeline_depth, double_buffer)
+
+    # ---- local multiply geometry (per schedule step) ------------------
+    pr, pc = grid.grid_shape(mesh)
+    pg = p_all = n_panels = None
+    if algorithm.startswith("ts_"):
+        p_all = pr * pc * grid.stack_size(mesh)
+        shapes = {
+            "ts_k": (m, k // p_all, n),
+            "ts_m": (m // p_all, k, n),
+            "ts_n": (m, k, n // p_all),
+        }
+        ml, kl, nl = shapes[algorithm]
+    elif algorithm in ("cannon", "cannon25d"):
+        # Local multiply is (m/pg, k/pg) @ (k/pg, n/pg) on the square
+        # grid Cannon requires.  Deriving the inner dim from pc alone
+        # (the old ``k // pc``) silently mis-sized B's stack-plan
+        # geometry whenever pr != pc: gathers clamp out-of-range
+        # block indices instead of failing, producing wrong C.
+        pg = grid.validate_square(mesh)
+        if (m % pg or k % pg or n % pg) and not densify:
+            raise ValueError(
+                f"shape ({m},{k},{n}) not divisible by grid side {pg}")
+        ml, kl, nl = m // pg, k // pg, n // pg
+    elif kw.get("bcast") == "gather":
+        # PUMMA-style broadcast: the local multiply sees the
+        # all-gathered full-K row of A / column of B — a single
+        # stack-plan geometry on any grid shape.
+        if (m % pr or n % pc) and not densify:
+            raise ValueError(
+                f"shape ({m},{n}) not divisible by grid {pr}x{pc}")
+        ml, kl, nl = m // pr, k, n // pc
+    else:
+        # summa psum: every panel's local multiply is
+        # (m/pr, k/n_panels) @ (k/n_panels, n/pc) — one per-panel
+        # stack-plan geometry shared by all panels, so non-square
+        # grids are fine (for square grids k/n_panels == k/pc, the
+        # historical full-local-K geometry).
+        n_panels = summa_n_panels(pr, pc)
+        if (m % pr or n % pc or k % n_panels) and not densify:
+            raise ValueError(
+                f"shape ({m},{k},{n}) not divisible by summa grid "
+                f"{pr}x{pc} with {n_panels} panels")
+        ml, kl, nl = m // pr, k // n_panels, n // pc
 
     # ---- local multiply strategy (densified vs blocked) --------------
     if densify:
         lm = densified_local_matmul(precision, kernel=local_kernel)
     else:
-        pr, pc = grid.grid_shape(mesh)
-        pg = p_all = n_panels = None
-        if algorithm.startswith("ts_"):
-            p_all = pr * pc * grid.stack_size(mesh)
-            shapes = {
-                "ts_k": (m, k // p_all, n),
-                "ts_m": (m // p_all, k, n),
-                "ts_n": (m, k, n // p_all),
-            }
-            ml, kl, nl = shapes[algorithm]
-        elif algorithm in ("cannon", "cannon25d"):
-            # Local multiply is (m/pg, k/pg) @ (k/pg, n/pg) on the square
-            # grid Cannon requires.  Deriving the inner dim from pc alone
-            # (the old ``k // pc``) silently mis-sized B's stack-plan
-            # geometry whenever pr != pc: gathers clamp out-of-range
-            # block indices instead of failing, producing wrong C.
-            pg = grid.validate_square(mesh)
-            if m % pg or k % pg or n % pg:
-                raise ValueError(
-                    f"shape ({m},{k},{n}) not divisible by grid side {pg}")
-            ml, kl, nl = m // pg, k // pg, n // pg
-        elif kw.get("bcast") == "gather":
-            # PUMMA-style broadcast: the local multiply sees the
-            # all-gathered full-K row of A / column of B — a single
-            # stack-plan geometry on any grid shape.
-            if m % pr or n % pc:
-                raise ValueError(
-                    f"shape ({m},{n}) not divisible by grid {pr}x{pc}")
-            ml, kl, nl = m // pr, k, n // pc
-        else:
-            # summa psum: every panel's local multiply is
-            # (m/pr, k/n_panels) @ (k/n_panels, n/pc) — one per-panel
-            # stack-plan geometry shared by all panels, so non-square
-            # grids are fine (for square grids k/n_panels == k/pc, the
-            # historical full-local-K geometry).
-            n_panels = summa_n_panels(pr, pc)
-            if m % pr or n % pc or k % n_panels:
-                raise ValueError(
-                    f"shape ({m},{k},{n}) not divisible by summa grid "
-                    f"{pr}x{pc} with {n_panels} panels")
-            ml, kl, nl = m // pr, k // n_panels, n // pc
-
         blocked_kw = dict(
             block_m=block_m, block_k=block_k, block_n=block_n,
             stack_size=stack_size, align=align,
@@ -408,44 +409,50 @@ def distributed_matmul(
                 c_repl = (grid.stack_size(mesh)
                           if algorithm == "cannon25d" else 1)
                 steps = [{"pair_mask": pm}
-                         for pm in _cannon_pair_masks(am, bmk, pg, c_repl)]
+                         for pm in cannon_step_masks(am, bmk, pg, c_repl)]
                 lm = _stepwise_blocked_lm(ml, kl, nl, mask_steps=steps,
                                           **blocked_kw)
             elif algorithm == "summa" and kw.get("bcast") != "gather":
                 steps = [{"a_mask": ua, "b_mask": ub} for ua, ub in
-                         _summa_panel_masks(am, bmk, pr, pc, n_panels)]
+                         summa_step_masks(am, bmk, pr, pc, n_panels)]
                 lm = _stepwise_blocked_lm(ml, kl, nl, mask_steps=steps,
                                           **blocked_kw)
             elif algorithm == "summa":
-                ua, ub = _summa_gather_masks(am, bmk, pr, pc)
+                ua, ub = summa_gather_masks(am, bmk, pr, pc)
                 lm = blocked_local_matmul(ml, kl, nl, a_mask=ua, b_mask=ub,
                                           **blocked_kw)
             else:
                 lm = blocked_local_matmul(
-                    ml, kl, nl, **_ts_masks(algorithm, am, bmk, p_all),
+                    ml, kl, nl, **ts_step_masks(algorithm, am, bmk, p_all),
                     **blocked_kw)
 
-    # ---- data-exchange algorithm --------------------------------------
+    # ---- data-exchange algorithm (all via the schedule engine) --------
     if algorithm == "cannon":
         c = cannon_matmul(
             a, b, mesh=mesh, grid=grid, local_matmul=lm,
-            precision=precision, double_buffer=double_buffer, **kw)
+            precision=precision, pipeline_depth=depth, **kw)
     elif algorithm == "cannon25d":
         c = cannon25d_matmul(
             a, b, mesh=mesh, grid=grid, local_matmul=lm,
-            precision=precision, double_buffer=double_buffer, **kw)
+            precision=precision, pipeline_depth=depth, **kw)
     elif algorithm in ("ts_k", "ts_m", "ts_n"):
         c = tall_skinny_matmul(
             a, b, mesh=mesh, grid=grid, mode=algorithm, local_matmul=lm,
-            precision=precision, **kw)
+            precision=precision, pipeline_depth=depth, **kw)
     else:
         c = summa_matmul(
             a, b, mesh=mesh, grid=grid, local_matmul=lm,
-            precision=precision, **kw)
+            precision=precision, pipeline_depth=depth, **kw)
     if not return_plan:
         return c
     import dataclasses as _dc
 
-    plan = _dc.replace(plan, executor_stats=_collect_executor_stats(
-        lm, densify))
+    itemsize = int(jnp.dtype(jnp.promote_types(a.dtype, b.dtype)).itemsize)
+    plan = _dc.replace(
+        plan,
+        executor_stats=_collect_executor_stats(lm, densify),
+        schedule_stats=_schedule_stats(
+            algorithm, grid=grid, mesh=mesh, local_shape=(ml, kl, nl),
+            itemsize=itemsize, lm=lm, densify=densify, pipeline_depth=depth,
+            reduce_kw=kw))
     return c, plan

@@ -19,22 +19,32 @@ We implement the panel broadcast two ways:
     operand size.
 
 Unlike Cannon, SUMMA supports non-square process grids.
+
+The panel loop is the unified schedule engine (core/schedule.py):
+``build_summa_schedule`` emits one step per panel whose ``recv`` is the
+masked-allreduce broadcast (operands stay resident — ``shift`` is the
+identity), so at ``pipeline_depth=2`` the broadcast of panel t+1 is
+issued before the local multiply of panel t.
 """
 from __future__ import annotations
 
 import math
-from typing import Callable, Optional
+from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 
 from .blocking import GridSpec
 from .cannon import _default_local_matmul
+from .schedule import Schedule, execute_schedule, resolve_pipeline_depth
 
-__all__ = ["summa_matmul", "summa_n_panels"]
+__all__ = ["summa_matmul", "summa_n_panels", "build_summa_schedule",
+           "build_summa_gather_schedule", "summa_step_masks",
+           "summa_gather_masks"]
 
 
 def summa_n_panels(pr: int, pc: int) -> int:
@@ -47,6 +57,139 @@ def summa_n_panels(pr: int, pc: int) -> int:
     return pc if pr == pc else math.lcm(pr, pc)
 
 
+def build_summa_schedule(
+    pr: int,
+    pc: int,
+    *,
+    row_axis: str,
+    col_axis: str,
+    n_panels: Optional[int] = None,
+    empty_steps: frozenset = frozenset(),
+    local_shape: Optional[tuple] = None,
+    itemsize: int = 4,
+) -> Schedule:
+    """Schedule for psum-broadcast SUMMA: one step per contraction
+    panel; ``recv`` slices the resident local blocks and broadcasts the
+    panel pair by masked all-reduce along the perpendicular grid axes.
+    """
+    n_panels = summa_n_panels(pr, pc) if n_panels is None else n_panels
+
+    def recv(carry, p):
+        a_blk, b_blk = carry
+        kl_a = a_blk.shape[1] * pc // n_panels   # A panel width (local)
+        kl_b = b_blk.shape[0] * pr // n_panels   # B panel height (local)
+        my_col = jax.lax.axis_index(col_axis)
+        my_row = jax.lax.axis_index(row_axis)
+        # owner coordinates of panel p
+        col_owner = p * pc // n_panels
+        row_owner = p * pr // n_panels
+        a_off = (p % (n_panels // pc)) * kl_a if n_panels != pc else 0
+        b_off = (p % (n_panels // pr)) * kl_b if n_panels != pr else 0
+        a_panel = jax.lax.dynamic_slice_in_dim(a_blk, a_off, kl_a, axis=1)
+        b_panel = jax.lax.dynamic_slice_in_dim(b_blk, b_off, kl_b, axis=0)
+        # broadcast-by-masked-allreduce along the perpendicular axis
+        a_panel = jnp.where(my_col == col_owner, a_panel, 0)
+        a_panel = jax.lax.psum(a_panel, col_axis)
+        b_panel = jnp.where(my_row == row_owner, b_panel, 0)
+        b_panel = jax.lax.psum(b_panel, row_axis)
+        return (a_panel, b_panel)
+
+    step_bytes = 0
+    if local_shape is not None:
+        ml, klp, nl = local_shape  # per-panel local multiply geometry
+        # masked all-reduce moves ~2x the optimal broadcast volume
+        step_bytes = 2 * (ml * klp + klp * nl) * itemsize
+
+    return Schedule(
+        algorithm="summa",
+        n_steps=n_panels,
+        recv=recv,
+        empty_steps=frozenset(empty_steps),
+        comm_op=f"bcast-psum(a:{col_axis}, b:{row_axis})",
+        step_comm_bytes=tuple(
+            0 if t in empty_steps else step_bytes for t in range(n_panels)),
+    )
+
+
+def summa_step_masks(
+    am: np.ndarray, bm: np.ndarray, pr: int, pc: int, n_panels: int,
+) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Per-panel (a_mask, b_mask) unions for psum-broadcast SUMMA — the
+    schedule builder's per-step mask slices.
+
+    Panel p covers the global K block range [p*nbk/n_panels, ...); the
+    A-side union runs over the pr row chunks, the B-side over the pc
+    column chunks.  Because the row and column ranks vary independently,
+    the union of per-rank products equals the product of the factored
+    unions — no 3D pair tensor needed.
+    """
+    nbr, nbk = am.shape
+    nbc = bm.shape[1]
+    if nbr % pr or nbc % pc or nbk % n_panels:
+        raise ValueError(
+            f"block grid ({nbr},{nbk},{nbc}) not divisible by summa grid "
+            f"{pr}x{pc} with {n_panels} panels")
+    lr, lc, lkp = nbr // pr, nbc // pc, nbk // n_panels
+    out = []
+    for p in range(n_panels):
+        ksl = slice(p * lkp, (p + 1) * lkp)
+        ua = np.zeros((lr, lkp), dtype=bool)
+        for i in range(pr):
+            ua |= am[i * lr:(i + 1) * lr, ksl]
+        ub = np.zeros((lkp, lc), dtype=bool)
+        for j in range(pc):
+            ub |= bm[ksl, j * lc:(j + 1) * lc]
+        out.append((ua, ub))
+    return out
+
+
+def summa_gather_masks(
+    am: np.ndarray, bm: np.ndarray, pr: int, pc: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Factored unions for PUMMA-style (all-gather) SUMMA: the local
+    multiply sees the full K extent, so there is a single step whose A
+    mask unions over row chunks and B mask over column chunks."""
+    nbr, nbk = am.shape
+    nbc = bm.shape[1]
+    if nbr % pr or nbc % pc:
+        raise ValueError(
+            f"block grid ({nbr},{nbc}) not divisible by grid {pr}x{pc}")
+    lr, lc = nbr // pr, nbc // pc
+    ua = np.zeros((lr, nbk), dtype=bool)
+    for i in range(pr):
+        ua |= am[i * lr:(i + 1) * lr]
+    ub = np.zeros((nbk, lc), dtype=bool)
+    for j in range(pc):
+        ub |= bm[:, j * lc:(j + 1) * lc]
+    return ua, ub
+
+
+def build_summa_gather_schedule(row_axis: str, col_axis: str,
+                           local_shape: Optional[tuple] = None,
+                           itemsize: int = 4) -> Schedule:
+    """PUMMA-style SUMMA as a single-step schedule: the all-gather of
+    the full local row of A / column of B is the prologue, the one
+    local multiply is step 0."""
+
+    def prologue(a_blk, b_blk):
+        a_row = jax.lax.all_gather(a_blk, col_axis, axis=1, tiled=True)
+        b_col = jax.lax.all_gather(b_blk, row_axis, axis=0, tiled=True)
+        return (a_row, b_col)
+
+    prologue_bytes = 0
+    if local_shape is not None:
+        ml, kl, nl = local_shape  # gathered (full-K) local geometry
+        prologue_bytes = (ml * kl + kl * nl) * itemsize
+
+    return Schedule(
+        algorithm="summa",
+        n_steps=1,
+        prologue=prologue,
+        comm_op=f"all_gather(a:{col_axis}, b:{row_axis})",
+        prologue_comm_bytes=prologue_bytes,
+    )
+
+
 def summa_matmul(
     a: jax.Array,
     b: jax.Array,
@@ -57,71 +200,41 @@ def summa_matmul(
     out_dtype=None,
     precision=jax.lax.Precision.DEFAULT,
     bcast: str = "psum",
+    pipeline_depth: Optional[int] = None,
+    double_buffer: Optional[bool] = None,
 ) -> jax.Array:
-    """C = A @ B via SUMMA on the (row_axis, col_axis) grid."""
+    """C = A @ B via SUMMA on the (row_axis, col_axis) grid.
+
+    ``pipeline_depth`` follows core/schedule.py semantics: at depth 2
+    the panel broadcast for step t+1 overlaps the local multiply of
+    step t; depth 1 is strictly serial (bit-identical output).
+    """
     pr, pc = grid.grid_shape(mesh)
     if out_dtype is None:
         out_dtype = jnp.promote_types(a.dtype, b.dtype)
     lm = local_matmul or _default_local_matmul(precision)
-    row_ax, col_ax = grid.row_axis, grid.col_axis
+    depth = resolve_pipeline_depth(pipeline_depth, double_buffer)
 
     if bcast == "gather":
-        def body_gather(a_blk, b_blk):
-            # PUMMA-style: materialise the full local row of A and
-            # column of B, then one big local dot.
-            a_row = jax.lax.all_gather(a_blk, col_ax, axis=1, tiled=True)
-            b_col = jax.lax.all_gather(b_blk, row_ax, axis=0, tiled=True)
-            return lm(a_row, b_col).astype(out_dtype)
-
-        spec = P(row_ax, col_ax)
-        fn = shard_map(
-            body_gather, mesh=mesh, in_specs=(spec, spec), out_specs=spec,
-            check_vma=False,
-        )
-        return fn(a, b)
-
-    if bcast != "psum":
+        # the single gathered dot historically cast straight to
+        # out_dtype — accumulate there, not in f32, so f64/int operands
+        # keep full precision
+        sched = build_summa_gather_schedule(grid.row_axis, grid.col_axis)
+        accum = out_dtype
+    elif bcast == "psum":
+        sched = build_summa_schedule(
+            pr, pc, row_axis=grid.row_axis, col_axis=grid.col_axis,
+            empty_steps=getattr(lm, "empty_steps", frozenset()))
+        accum = jnp.float32  # legacy per-panel f32 accumulation
+    else:
         raise ValueError(bcast)
 
-    # Panel count: one panel per grid column of A (= per grid row of B);
-    # the lcm for non-square grids (see summa_n_panels).
-    n_panels = summa_n_panels(pr, pc)
-    # Stepwise (occupancy-masked) local multiplies carry per-panel stack
-    # plans and a host-static set of panels whose mask product is empty
-    # on every rank — those skip the broadcast AND the local multiply
-    # (uniform across devices, so SPMD-safe).
-    stepwise = bool(getattr(lm, "stepwise", False))
-    empty_steps = getattr(lm, "empty_steps", frozenset())
-
     def body(a_blk, b_blk):
-        my_col = jax.lax.axis_index(col_ax)
-        my_row = jax.lax.axis_index(row_ax)
-        kl_a = a_blk.shape[1] * pc // n_panels   # A panel width (local)
-        kl_b = b_blk.shape[0] * pr // n_panels   # B panel height (local)
-        c = jnp.zeros((a_blk.shape[0], b_blk.shape[1]), jnp.float32)
+        return execute_schedule(sched, a_blk, b_blk, local_matmul=lm,
+                                out_dtype=out_dtype, pipeline_depth=depth,
+                                accum_dtype=accum)
 
-        for p in range(n_panels):
-            if p in empty_steps:
-                continue
-            # owner coordinates of panel p
-            col_owner = p * pc // n_panels
-            row_owner = p * pr // n_panels
-            a_off = (p % (n_panels // pc)) * kl_a if n_panels != pc else 0
-            b_off = (p % (n_panels // pr)) * kl_b if n_panels != pr else 0
-            a_panel = jax.lax.dynamic_slice_in_dim(a_blk, a_off, kl_a, axis=1)
-            b_panel = jax.lax.dynamic_slice_in_dim(b_blk, b_off, kl_b, axis=0)
-            # broadcast-by-masked-allreduce along the perpendicular axis
-            a_panel = jnp.where(my_col == col_owner, a_panel, 0)
-            a_panel = jax.lax.psum(a_panel, col_ax)
-            b_panel = jnp.where(my_row == row_owner, b_panel, 0)
-            b_panel = jax.lax.psum(b_panel, row_ax)
-            part = (lm(a_panel, b_panel, step=p) if stepwise
-                    else lm(a_panel, b_panel))
-            if part is not None:
-                c = c + part.astype(jnp.float32)
-        return c.astype(out_dtype)
-
-    spec = P(row_ax, col_ax)
+    spec = P(grid.row_axis, grid.col_axis)
     fn = shard_map(body, mesh=mesh, in_specs=(spec, spec),
                    out_specs=spec, check_vma=False)
     return fn(a, b)

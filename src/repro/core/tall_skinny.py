@@ -28,15 +28,17 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 
 from .blocking import GridSpec
 from .cannon import _default_local_matmul
+from .schedule import Schedule, execute_schedule, resolve_pipeline_depth
 
-__all__ = ["tall_skinny_matmul", "classify_shape", "ts_classify_ratio",
-           "DEFAULT_TS_RATIO"]
+__all__ = ["tall_skinny_matmul", "build_ts_schedule", "ts_step_masks",
+           "classify_shape", "ts_classify_ratio", "DEFAULT_TS_RATIO"]
 
 # The historical hardcoded tall/skinny threshold.  The live threshold
 # is planner-owned (the cost-model crossover where tall-skinny's O(1)
@@ -94,6 +96,87 @@ def classify_shape(m: int, k: int, n: int,
     return "cannon"
 
 
+def build_ts_schedule(
+    mode: str,
+    axes,
+    *,
+    reduce: str = "reduce_scatter",
+    local_shape: Optional[tuple] = None,
+    itemsize: int = 4,
+) -> Schedule:
+    """Schedule for the tall-and-skinny variants: a single compute step
+    (operands arrive pre-sharded over ``axes``), with the O(1)-in-P
+    reduction of the (m, n) partial product as the epilogue (ts_k) or
+    no communication at all (ts_m / ts_n)."""
+    if mode not in ("ts_k", "ts_m", "ts_n"):
+        raise ValueError(mode)
+    epilogue_bytes = 0
+
+    if mode == "ts_k":
+        if reduce == "all_reduce":
+            def epilogue(c):
+                return jax.lax.psum(c, axes)   # O(1): ~2*M*N per device
+        elif reduce == "reduce_scatter":
+            def epilogue(c):
+                return jax.lax.psum_scatter(
+                    c, axes, scatter_dimension=0, tiled=True
+                )                              # (P-1)/P * M*N per device
+        else:
+            raise ValueError(reduce)
+        comm_op = f"psum{'_scatter' if reduce == 'reduce_scatter' else ''}"
+        if local_shape is not None:
+            ml, _, nl = local_shape
+            epilogue_bytes = 2 * ml * nl * 4   # f32 partial both ways
+    else:
+        epilogue = None
+        comm_op = "none (operand pre-replicated)"
+
+    kw = {} if epilogue is None else {"epilogue": epilogue}
+    return Schedule(
+        algorithm=mode,
+        n_steps=1,
+        comm_op=comm_op,
+        epilogue_comm_bytes=epilogue_bytes,
+        **kw,
+    )
+
+
+def ts_step_masks(mode: str, am: np.ndarray, bm: np.ndarray,
+                  p_all: int) -> dict:
+    """Single-step mask kwargs for the tall-and-skinny variants (the
+    contraction/tall dimension is sharded over all ``p_all`` devices) —
+    the schedule builder's per-step mask slice, as a union over ranks."""
+    nbr, nbk = am.shape
+    nbc = bm.shape[1]
+    if mode == "ts_k":
+        if nbk % p_all:
+            raise ValueError(f"K block grid {nbk} not divisible by {p_all}")
+        lk = nbk // p_all
+        pair = np.zeros((nbr, lk, nbc), dtype=bool)
+        for d in range(p_all):
+            ac = am[:, d * lk:(d + 1) * lk]
+            if not ac.any():
+                continue
+            bc = bm[d * lk:(d + 1) * lk, :]
+            pair |= ac[:, :, None] & bc[None, :, :]
+        return {"pair_mask": pair}
+    if mode == "ts_m":
+        if nbr % p_all:
+            raise ValueError(f"M block grid {nbr} not divisible by {p_all}")
+        lr = nbr // p_all
+        ua = np.zeros((lr, nbk), dtype=bool)
+        for d in range(p_all):
+            ua |= am[d * lr:(d + 1) * lr]
+        return {"a_mask": ua, "b_mask": bm}
+    if nbc % p_all:
+        raise ValueError(f"N block grid {nbc} not divisible by {p_all}")
+    lc = nbc // p_all
+    ub = np.zeros((nbk, lc), dtype=bool)
+    for d in range(p_all):
+        ub |= bm[:, d * lc:(d + 1) * lc]
+    return {"a_mask": am, "b_mask": ub}
+
+
 def tall_skinny_matmul(
     a: jax.Array,
     b: jax.Array,
@@ -105,6 +188,7 @@ def tall_skinny_matmul(
     local_matmul: Optional[Callable] = None,
     out_dtype=None,
     precision=jax.lax.Precision.DEFAULT,
+    pipeline_depth: Optional[int] = None,
 ) -> jax.Array:
     """C = A @ B with the tall-and-skinny algorithm.
 
@@ -112,55 +196,39 @@ def tall_skinny_matmul(
       P((row,col), None); C replicated or row-sharded.
     mode='ts_m': A sharded P((row,col), None), B replicated; C row-sharded.
     mode='ts_n': A replicated, B sharded P(None, (row,col)); C col-sharded.
+
+    The single compute step routes through the schedule engine for
+    uniformity; ``pipeline_depth`` is accepted but has no overlap to
+    express on a one-step schedule.
     """
     axes = (grid.row_axis, grid.col_axis) if grid.stack_axis is None else (
         grid.stack_axis, grid.row_axis, grid.col_axis)
     if out_dtype is None:
         out_dtype = jnp.promote_types(a.dtype, b.dtype)
     lm = local_matmul or _default_local_matmul(precision)
+    depth = resolve_pipeline_depth(pipeline_depth)
+    sched = build_ts_schedule(mode, axes, reduce=reduce)
+    # ts_k reduces f32 partials (legacy semantics); the zero-comm
+    # ts_m/ts_n variants historically cast the single local dot straight
+    # to out_dtype — accumulate there, not in f32, so f64/int operands
+    # keep full precision
+    accum = jnp.float32 if mode == "ts_k" else out_dtype
+
+    def body(a_blk, b_blk):
+        return execute_schedule(sched, a_blk, b_blk, local_matmul=lm,
+                                out_dtype=out_dtype, pipeline_depth=depth,
+                                accum_dtype=accum)
 
     if mode == "ts_m":
         # zero-communication: shard the tall output dimension
-        def body_m(a_blk, b_full):
-            return lm(a_blk, b_full).astype(out_dtype)
-
-        fn = shard_map(
-            body_m, mesh=mesh,
-            in_specs=(P(axes, None), P(None, None)),
-            out_specs=P(axes, None), check_vma=False,
-        )
-        return fn(a, b)
-
-    if mode == "ts_n":
-        def body_n(a_full, b_blk):
-            return lm(a_full, b_blk).astype(out_dtype)
-
-        fn = shard_map(
-            body_n, mesh=mesh,
-            in_specs=(P(None, None), P(None, axes)),
-            out_specs=P(None, axes), check_vma=False,
-        )
-        return fn(a, b)
-
-    if mode != "ts_k":
-        raise ValueError(mode)
-
-    def body_k(a_blk, b_blk):
-        partial = lm(a_blk, b_blk).astype(jnp.float32)
-        if reduce == "all_reduce":
-            c = jax.lax.psum(partial, axes)          # O(1): ~2*M*N per device
-        elif reduce == "reduce_scatter":
-            c = jax.lax.psum_scatter(
-                partial, axes, scatter_dimension=0, tiled=True
-            )                                         # (P-1)/P * M*N per device
-        else:
-            raise ValueError(reduce)
-        return c.astype(out_dtype)
-
-    out_spec = P(None, None) if reduce == "all_reduce" else P(axes, None)
-    fn = shard_map(
-        body_k, mesh=mesh,
-        in_specs=(P(None, axes), P(axes, None)),
-        out_specs=out_spec, check_vma=False,
-    )
+        in_specs = (P(axes, None), P(None, None))
+        out_spec = P(axes, None)
+    elif mode == "ts_n":
+        in_specs = (P(None, None), P(None, axes))
+        out_spec = P(None, axes)
+    else:  # ts_k
+        in_specs = (P(None, axes), P(axes, None))
+        out_spec = P(None, None) if reduce == "all_reduce" else P(axes, None)
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_spec, check_vma=False)
     return fn(a, b)

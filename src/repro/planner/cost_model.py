@@ -33,6 +33,21 @@ Local-path costs:
               *before* any candidate is costed (this is where the old
               divide-by-zero lived).
 
+Comm/compute overlap (the schedule engine, core/schedule.py): at
+``pipeline_depth >= 2`` the driver issues step t+1's ppermute / panel
+broadcast while step t's stacks execute, hiding part of the
+communication behind compute.  The model discounts each candidate by
+
+    overlap_s = eff(algorithm) * min(overlappable_comm_s, compute_s)
+
+where ``overlappable_comm_s`` is the algorithm's pipelined comm volume
+(all but the un-hideable first/last transfer: Cannon shifts, SUMMA
+panel broadcasts, the ts_* operand prefetch) and ``eff`` is the
+per-algorithm *measured* overlap efficiency in [0, 1]
+(``HardwareModel.overlap_*``, fitted by ``calibrate.measure_overlap``
+from depth-1 vs depth-2 timings — this replaces the old ts-only
+"prefetchable so latency-light" special case with calibrated data).
+
 Hardware constants live in ``HardwareModel``; defaults are documented
 below and overridden by ``repro.planner.calibrate`` from measured
 artifacts.  Every candidate evaluation bumps ``N_EVALS`` so tests (and
@@ -52,6 +67,8 @@ __all__ = [
     "candidate_cost",
     "enumerate_candidates",
     "feasible",
+    "overlap_efficiency",
+    "algorithm_steps",
     "ts_crossover_ratio",
     "ALGORITHMS",
 ]
@@ -84,6 +101,14 @@ class HardwareModel:
       densify_bytes_per_s densify/undensify copy bandwidth
       mem_bytes           per-device memory capacity (gates 2.5D
                           replication and ts_* operand replication)
+      overlap_*           measured comm/compute overlap efficiency in
+                          [0, 1] per algorithm family (fraction of the
+                          pipelined communication the schedule engine
+                          hides behind compute at pipeline_depth >= 2;
+                          calibrate.measure_overlap fits these from
+                          depth-1 vs depth-2 timings).  Defaults are 0
+                          — serial-equivalent predictions — until a
+                          calibration run measures the real machine.
     """
 
     flops_per_s: float = 1.25e11
@@ -93,6 +118,10 @@ class HardwareModel:
     latency_s: float = 2.0e-4
     densify_bytes_per_s: float = 2.0e10
     mem_bytes: float = 8.0e9
+    overlap_cannon: float = 0.0
+    overlap_cannon25d: float = 0.0
+    overlap_summa: float = 0.0
+    overlap_ts: float = 0.0
 
     def replace(self, **kw) -> "HardwareModel":
         return dataclasses.replace(self, **kw)
@@ -146,6 +175,7 @@ class CandidateCost:
     comm_s: float
     compute_s: float
     overhead_s: float       # message latency + densify copies
+    overlap_s: float        # comm hidden behind compute (subtracted)
     mem_bytes: float
     total_s: float
 
@@ -159,7 +189,26 @@ class CandidateCost:
 def _infeasible(algorithm: str, densify: bool, c_repl: int,
                 reason: str) -> CandidateCost:
     return CandidateCost(algorithm, densify, c_repl, False, reason,
-                         math.inf, math.inf, math.inf, math.inf, math.inf)
+                         math.inf, math.inf, math.inf, 0.0, math.inf,
+                         math.inf)
+
+
+def overlap_efficiency(hw: HardwareModel, algorithm: str) -> float:
+    """The calibrated comm/compute overlap efficiency for one
+    algorithm family, clamped to [0, 1]."""
+    if algorithm.startswith("ts_"):
+        eff = hw.overlap_ts
+    else:
+        eff = getattr(hw, f"overlap_{algorithm}", 0.0)
+    return min(max(float(eff), 0.0), 1.0)
+
+
+def algorithm_steps(prob: Problem, algorithm: str, c_repl: int = 1) -> int:
+    """Data-exchange step count of the algorithm's schedule (1 for the
+    tall-skinny variants); 0 when the geometry is infeasible.  Used by
+    the planner to decide whether a pipeline depth > 1 buys anything."""
+    reason, geom = _local_geometry(prob, algorithm, c_repl)
+    return 0 if reason is not None else int(geom[3])
 
 
 def _local_geometry(prob: Problem, algorithm: str,
@@ -261,12 +310,17 @@ def candidate_cost(
     *,
     stack_tile: Optional[int] = None,
     smm_flops_per_s: Optional[float] = None,
+    pipeline_depth: int = 2,
 ) -> CandidateCost:
     """Predicted execution cost of one candidate configuration.
 
     ``stack_tile`` / ``smm_flops_per_s`` let the planner thread the
     occupancy-binned autotune winner (and its recorded throughput) into
     the blocked-path model instead of the global constant.
+    ``pipeline_depth`` mirrors the schedule engine's knob: depth >= 2
+    applies the calibrated per-algorithm overlap discount to the
+    pipelined communication (the driver's default); depth 1 predicts
+    the serial loop.
     """
     global N_EVALS
     N_EVALS += 1
@@ -290,51 +344,73 @@ def candidate_cost(
     overhead_s = steps * overhead_1
 
     # -- communication volume & message count (bytes per device) ------
+    # ``overlappable`` is the slice of comm_bytes the schedule engine's
+    # double buffering can hide behind compute: everything except the
+    # transfer no compute step runs beside (Cannon's last shift has no
+    # next multiply; SUMMA's first broadcast has no previous one;
+    # synchronizing reductions depend on the compute and cannot hide)
     if algorithm == "cannon":
-        comm_bytes = steps * (ml * kl + kl * nl) * e
+        shift_bytes = (ml * kl + kl * nl) * e
+        comm_bytes = steps * shift_bytes
+        overlappable = (steps - 1) * shift_bytes
         messages = 2 * (steps + 1)          # skew + shifts, A and B
         mem = (ml * kl + kl * nl + ml * nl) * e
     elif algorithm == "cannon25d":
         # per-replica: 1/c of the shifts, plus one partial-C reduction
         # over the stack axis (f32 partials); paper-model accounting
         # charges the c-fold operand replication to memory
-        comm_bytes = steps * (ml * kl + kl * nl) * e + 2.0 * ml * nl * 4
+        shift_bytes = (ml * kl + kl * nl) * e
+        comm_bytes = steps * shift_bytes + 2.0 * ml * nl * 4
+        overlappable = (steps - 1) * shift_bytes
         messages = 2 * (steps + 1) + max(c_repl.bit_length() - 1, 1)
         mem = c_repl * (ml * kl + kl * nl) * e + ml * nl * e
     elif algorithm == "summa":
         # masked-allreduce broadcast moves ~2x the optimal panel volume
-        comm_bytes = 2.0 * steps * (ml * kl + kl * nl) * e
+        panel_bytes = 2.0 * (ml * kl + kl * nl) * e
+        comm_bytes = steps * panel_bytes
+        overlappable = (steps - 1) * panel_bytes
         messages = 2 * steps
         mem = (prob.m * prob.k + prob.k * prob.n) / prob.p2d * e \
             + ml * nl * e
     elif algorithm == "ts_k":
         # one reduce_scatter of the (m, n) f32 partial product: O(1) in
         # P — a *synchronizing* collective with a data dependency on the
-        # local compute, so it pays message latency; operands reshard
-        # from the canonical P(row, col) layout to the K-sharded layout
-        # (~1/P of each operand received per device)
+        # local compute, so it pays message latency and cannot hide;
+        # operands reshard from the canonical P(row, col) layout to the
+        # K-sharded layout (~1/P of each operand received per device),
+        # which IS prefetchable ahead of the dot
         p = prob.p_all
-        comm_bytes = prob.m * prob.n * 4.0 \
-            + (prob.m * prob.k + prob.k * prob.n) * e / p
+        reshard = (prob.m * prob.k + prob.k * prob.n) * e / p
+        comm_bytes = prob.m * prob.n * 4.0 + reshard
+        overlappable = reshard
         messages = max(p.bit_length() - 1, 1)
         mem = (ml * kl + kl * nl + ml * nl) * e
     elif algorithm == "ts_m":
         # zero-communication compute once B is replicated; the input
         # movement is the full-B broadcast plus A's reshard (~1/P) —
-        # prefetchable, so it pays volume but little latency
+        # all prefetchable ahead of the single local dot
         p = prob.p_all
         comm_bytes = prob.k * prob.n * e + prob.m * prob.k * e / p
+        overlappable = comm_bytes
         messages = 1
         mem = (ml * kl + kl * nl + ml * nl) * e
     else:  # ts_n
         p = prob.p_all
         comm_bytes = prob.m * prob.k * e + prob.k * prob.n * e / p
+        overlappable = comm_bytes
         messages = 1
         mem = (ml * kl + kl * nl + ml * nl) * e
 
     comm_s = comm_bytes / hw.bytes_per_s
     overhead_s += messages * hw.latency_s
-    total = comm_s + compute_s + overhead_s
+    # calibrated overlap discount: the ts_* operand prefetch applies at
+    # any depth (it is not a loop property); the pipelined-loop overlap
+    # of the multi-step algorithms needs the double-buffered driver
+    eff = overlap_efficiency(hw, algorithm)
+    if not algorithm.startswith("ts_") and (pipeline_depth < 2 or steps < 2):
+        eff = 0.0
+    overlap_s = eff * min(overlappable / hw.bytes_per_s, compute_s)
+    total = comm_s + compute_s + overhead_s - overlap_s
     if mem > hw.mem_bytes:
         # geometry works but the replicas/shards don't fit: infeasible,
         # yet the totals stay finite so a caller with NO feasible
@@ -342,9 +418,9 @@ def candidate_cost(
         return CandidateCost(
             algorithm, densify, c_repl, False,
             f"needs {mem / 1e9:.2f} GB/device > {hw.mem_bytes / 1e9:.2f} GB",
-            comm_s, compute_s, overhead_s, mem, total)
+            comm_s, compute_s, overhead_s, overlap_s, mem, total)
     return CandidateCost(algorithm, densify, c_repl, True, "",
-                         comm_s, compute_s, overhead_s, mem, total)
+                         comm_s, compute_s, overhead_s, overlap_s, mem, total)
 
 
 def feasible(prob: Problem, algorithm: str, densify: bool,
@@ -369,6 +445,7 @@ def enumerate_candidates(
     *,
     stack_tile: Optional[int] = None,
     smm_flops_per_s: Optional[float] = None,
+    pipeline_depth: int = 2,
 ) -> Tuple[CandidateCost, ...]:
     """Cost every candidate in the (algorithm x local-path x c) space,
     optionally constrained to a forced algorithm / local path."""
@@ -382,7 +459,8 @@ def enumerate_candidates(
             for dens in paths:
                 out.append(candidate_cost(
                     hw, prob, algo, dens, cr, stack_tile=stack_tile,
-                    smm_flops_per_s=smm_flops_per_s))
+                    smm_flops_per_s=smm_flops_per_s,
+                    pipeline_depth=pipeline_depth))
     return tuple(out)
 
 

@@ -31,7 +31,9 @@ from typing import Optional, Tuple
 import numpy as np
 
 from .cost_model import (CandidateCost, HardwareModel, Problem,
-                         candidate_cost, enumerate_candidates, feasible)
+                         algorithm_steps, candidate_cost,
+                         enumerate_candidates, feasible,
+                         overlap_efficiency)
 
 __all__ = ["MultiplyPlan", "plan_multiply", "plan_cache_info",
            "plan_cache_clear"]
@@ -60,7 +62,10 @@ class MultiplyPlan:
     predicted_s: float
     trivial: bool
     candidates: Tuple[CandidateCost, ...]
+    pipeline_depth: int = 1        # schedule-engine depth to execute at
+    overlap_eff: float = 0.0       # calibrated overlap term of the winner
     executor_stats: Optional[dict] = None
+    schedule_stats: Optional[dict] = None
 
     @property
     def chosen(self) -> Optional[CandidateCost]:
@@ -79,22 +84,25 @@ class MultiplyPlan:
                 + f"  predicted={self.predicted_s * 1e3:.3g} ms")
         if self.trivial:
             return head + "  [trivial: empty mask product, nothing to do]"
+        head += (f"\n  schedule: pipeline_depth={self.pipeline_depth} "
+                 f"overlap_eff={self.overlap_eff:.2f} [calibrated]")
         if self.stack_tile is not None:
             head += (f"\n  stack params: align={self.align} "
                      f"stack_tile={self.stack_tile} [{self.params_source}]")
         lines = [head,
                  f"  {'candidate':26s} {'comm_ms':>9s} {'compute_ms':>11s} "
-                 f"{'overhead_ms':>12s} {'total_ms':>9s}"]
+                 f"{'overhead_ms':>12s} {'overlap_ms':>11s} {'total_ms':>9s}"]
         for c in sorted(self.candidates, key=lambda c: c.total_s):
             star = "*" if c is self.chosen else " "
             if c.feasible:
                 lines.append(
                     f"{star} {c.label:26s} {c.comm_s * 1e3:9.3f} "
                     f"{c.compute_s * 1e3:11.3f} {c.overhead_s * 1e3:12.3f} "
-                    f"{c.total_s * 1e3:9.3f}")
+                    f"{-c.overlap_s * 1e3:11.3f} {c.total_s * 1e3:9.3f}")
             else:
                 lines.append(f"{star} {c.label:26s} {'-':>9s} {'-':>11s} "
-                             f"{'-':>12s} {'-':>9s}  infeasible: {c.reason}")
+                             f"{'-':>12s} {'-':>11s} {'-':>9s}  "
+                             f"infeasible: {c.reason}")
         return "\n".join(lines)
 
 
@@ -199,6 +207,11 @@ def _plan_cached(
         raise ValueError(f"no feasible multiply candidate — {reasons}")
 
     blocked = not best.densify
+    # schedule-engine depth: double-buffer whenever the winner's
+    # schedule has more than one step (depth 2 never predicts slower —
+    # overlap_s >= 0); single-step schedules gain nothing from a second
+    # buffer, so plans record the serial depth for them
+    steps = algorithm_steps(prob, best.algorithm, best.c_repl)
     return MultiplyPlan(
         algorithm=best.algorithm,
         densify=best.densify,
@@ -210,6 +223,8 @@ def _plan_cached(
         predicted_s=best.total_s,
         trivial=False,
         candidates=candidates,
+        pipeline_depth=2 if steps > 1 else 1,
+        overlap_eff=overlap_efficiency(hw, best.algorithm),
     )
 
 

@@ -15,8 +15,9 @@ from conftest import run_subprocess_devices
 from repro.core import engine
 from repro.core.blocking import BlockLayout
 from repro.core.densify import blocked_local_matmul
-from repro.core.multiply import (_cannon_pair_masks, _masks_empty,
-                                 _stepwise_blocked_lm, _summa_panel_masks)
+from repro.core.cannon import cannon_step_masks as _cannon_pair_masks
+from repro.core.multiply import _masks_empty, _stepwise_blocked_lm
+from repro.core.summa import summa_step_masks as _summa_panel_masks
 from repro.core.stacks import build_stacks
 
 
