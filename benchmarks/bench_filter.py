@@ -1,0 +1,219 @@
+"""Norm-based filtering: eps sweep + purification trace.
+
+Two sections, both written into one artifact:
+
+  * **eps sweep** — one block workload whose per-block norms span
+    several decades (log-uniform block scales, the shape of a real
+    decaying-interaction matrix).  For retention targets
+    {100%, 50%, 20%, 5%, ~0%} the eps threshold is read off the
+    norm-product quantiles, the filtered plan is built, and its fused
+    dispatch is timed against the unfiltered plan on identical
+    payloads.  Reported per point: eps, retained triples/FLOPs,
+    dispatch wall-clock, speedup (CPU interpret-mode — the *ratio*
+    transfers, absolute times are not TPU truth).
+  * **purification trace** — McWeeny iterations via
+    ``dbcsr.multiply(filter_eps=...)`` (repro.sparsity.workloads) with
+    per-iteration occupancy, retained/filtered FLOPs and wall time:
+    the dispatch-time curve of a workload whose sparsity *evolves*.
+
+    PYTHONPATH=src python -m benchmarks.bench_filter [--smoke] [--check]
+
+``--smoke`` runs a small geometry and writes
+artifacts/bench/filter_smoke.json (scripts/ci.sh gates it with
+``--check``: the filtered dispatch at the 5%-retention point must not
+be slower than the unfiltered dispatch beyond the jitter floor, and
+retained triples must fall monotonically with eps); the full run
+writes artifacts/bench/filter.json.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=1")
+
+import argparse
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.densify import to_blocks
+from repro.core.engine import build_executor_plan, execute_plan
+from repro.sparsity.norms import compute_block_norms
+
+RETENTION_TARGETS = (1.0, 0.5, 0.2, 0.05, 0.0)
+
+
+def time_call(fn, *args, reps=5):
+    """Best-of-reps wall time (min is the standard low-noise estimator
+    for microbenchmarks)."""
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _decaying_payload(block, n_blocks, rng):
+    """Dense blocked payload whose block norms span ~4 decades."""
+    scales = 10.0 ** rng.uniform(-4, 0, size=(n_blocks, n_blocks))
+    a = rng.randn(n_blocks * block, n_blocks * block).astype(np.float32)
+    a *= np.repeat(np.repeat(scales, block, 0), block, 1).astype(np.float32)
+    return a
+
+
+def eps_sweep(block, n_blocks, stack_size, reps, kernel="ref"):
+    m = block * n_blocks
+    rng = np.random.RandomState(0)
+    a = _decaying_payload(block, n_blocks, rng)
+    b = _decaying_payload(block, n_blocks, rng)
+    an = compute_block_norms(a, block, block)
+    bn = compute_block_norms(b, block, block)
+    # the norm-product distribution sets the eps grid: eps at the
+    # (1 - target) quantile retains ~target of the triples
+    prods = (an.astype(np.float64)[:, :, None]
+             * bn.astype(np.float64)[None, :, :]).ravel()
+    flop_per_triple = 2 * block ** 3
+
+    ab = to_blocks(jnp.asarray(a), block, block)
+    bb = to_blocks(jnp.asarray(b), block, block)
+    c0 = jnp.zeros((n_blocks * n_blocks, block, block), jnp.float32)
+
+    dense_plan = build_executor_plan(m, m, m, block, block, block, stack_size)
+    t_dense = time_call(
+        jax.jit(lambda ab, bb, c0, p=dense_plan: execute_plan(
+            p, ab, bb, c0, kernel=kernel)), ab, bb, c0, reps=reps)
+
+    rows = []
+    for target in RETENTION_TARGETS:
+        if target >= 1.0:
+            eps = 0.0
+        elif target <= 0.0:
+            eps = float(prods.max()) * 2.0
+        else:
+            eps = float(np.quantile(prods, 1.0 - target))
+        plan = build_executor_plan(m, m, m, block, block, block, stack_size,
+                                   a_norms=an, b_norms=bn, filter_eps=eps)
+        if plan.n_stacks:
+            t = time_call(
+                jax.jit(lambda ab, bb, c0, p=plan: execute_plan(
+                    p, ab, bb, c0, kernel=kernel)), ab, bb, c0, reps=reps)
+        else:
+            t = 0.0  # empty product: nothing dispatches
+        retained = plan.n_entries
+        rows.append({
+            "retention_target": target,
+            "filter_eps": eps,
+            "n_triples_unfiltered": plan.n_unfiltered_entries,
+            "n_triples_retained": retained,
+            "retained_fraction": retained / max(plan.n_unfiltered_entries, 1),
+            "retained_flops": retained * flop_per_triple,
+            "filtered_flops": plan.n_norm_filtered_triples * flop_per_triple,
+            "t_filtered_s": t,
+            "t_unfiltered_s": t_dense,
+            # null for the empty-product row: nothing dispatched, and a
+            # bare Infinity would make the artifact invalid JSON
+            "speedup": t_dense / t if t else None,
+        })
+        print(f"retention {target:4g} (eps {eps:9.3g}): "
+              f"{retained:6d}/{plan.n_unfiltered_entries} triples  "
+              f"filtered {t * 1e3:8.2f} ms  dense {t_dense * 1e3:8.2f} ms")
+    return rows
+
+
+def purification_trace(n, block, n_iter, filter_eps):
+    from repro.compat import make_mesh
+    from repro.core import dbcsr
+    from repro.core.blocking import GridSpec
+    from repro.sparsity.workloads import (banded_hamiltonian,
+                                          initial_density, mcweeny_purify)
+
+    H, mask = banded_hamiltonian(n, block)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    grid = GridSpec("data", "model")
+    P0 = dbcsr.create(initial_density(H).astype(np.float32), mesh=mesh,
+                      grid=grid, block_size=block, block_mask=mask)
+    rows = []
+    P = P0
+    for it in range(n_iter):
+        t0 = time.perf_counter()
+        P, tr = mcweeny_purify(
+            P, mesh=mesh, n_iter=1, filter_eps=filter_eps,
+            multiply_kw=dict(densify=False, local_kernel="ref"))
+        dt = time.perf_counter() - t0
+        entry = dict(tr[0], iteration=it, wall_s=dt)
+        rows.append(entry)
+        print(f"iter {it}: occ {entry['occupancy']:.4f}  "
+              f"retained {entry.get('n_retained_triples', 0):6d}  "
+              f"filtered {entry.get('n_norm_filtered_triples', 0):6d}  "
+              f"{dt * 1e3:8.1f} ms")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small geometry, few reps -> filter_smoke.json")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless retained triples fall "
+                         "monotonically with eps AND the 5%%-retention "
+                         "dispatch is not slower than the unfiltered one "
+                         "beyond the jitter floor (CI gate)")
+    ap.add_argument("--out", default="artifacts/bench")
+    args = ap.parse_args()
+
+    if args.smoke:
+        block, n_blocks, stack_size, reps = 8, 8, 64, 3
+        purif = dict(n=128, block=16, n_iter=6, filter_eps=1e-6)
+    else:
+        block, n_blocks, stack_size, reps = 16, 16, 512, 5
+        purif = dict(n=512, block=32, n_iter=10, filter_eps=1e-6)
+
+    print(f"== eps sweep ({n_blocks}x{n_blocks} blocks of {block}) ==")
+    sweep_rows = eps_sweep(block, n_blocks, stack_size, reps)
+    print(f"== purification trace (n={purif['n']}, "
+          f"eps={purif['filter_eps']:g}) ==")
+    purif_rows = purification_trace(**purif)
+
+    retained = [r["n_triples_retained"] for r in sweep_rows]
+    monotone_triples = all(retained[i] >= retained[i + 1]
+                           for i in range(len(retained) - 1))
+    # the 5%-retention point must not dispatch slower than unfiltered:
+    # 10% relative slack + 1 ms absolute floor, matching the other CI
+    # gates (interpret-mode sub-ms jitter)
+    low = min((r for r in sweep_rows if 0 < r["retention_target"] <= 0.05),
+              key=lambda r: r["retention_target"], default=None)
+    low_not_slower = (low is None or
+                      low["t_filtered_s"] <= low["t_unfiltered_s"] * 1.1
+                      + 1e-3)
+    occs = [r["occupancy"] for r in purif_rows]
+    peak = occs.index(max(occs))
+    purif_decays = all(occs[i + 1] <= occs[i] + 1e-12
+                       for i in range(peak, len(occs) - 1))
+    result = {
+        "block": block,
+        "n_blocks": n_blocks,
+        "stack_size": stack_size,
+        "eps_sweep": sweep_rows,
+        "purification": purif_rows,
+        "monotone_retained_triples": monotone_triples,
+        "low_retention_not_slower": low_not_slower,
+        "purification_occupancy_decays": purif_decays,
+    }
+    os.makedirs(args.out, exist_ok=True)
+    name = "filter_smoke.json" if args.smoke else "filter.json"
+    path = os.path.join(args.out, name)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"monotone retained triples: {monotone_triples}   "
+          f"5%-retention not slower: {low_not_slower}   "
+          f"purification occupancy decays: {purif_decays}")
+    print("wrote ->", path)
+    if args.check and not (monotone_triples and low_not_slower
+                           and purif_decays):
+        raise SystemExit("filter benchmark gate failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,12 @@ occupancy, and wall-clock of both dispatches (CPU interpret-mode — the
 *ratio* is the transferable number; absolute times are not TPU truth).
 Dense masks are also checked bit-identical against the dense plan.
 
+A second section sweeps the stack executor's size-bin cap
+(``stack_bins`` / DBCSR_STACK_BINS, core/engine.py) on a ragged
+low-fill workload: each extra bin is one more scan trace but pads
+short stacks less — the ROADMAP "bin cap trades trace count against
+padding" sweep, recorded per cap as bins/padding/dispatch time.
+
     PYTHONPATH=src python -m benchmarks.bench_sparse [--smoke]
 
 ``--smoke`` runs a small geometry with few reps and writes
@@ -104,6 +110,55 @@ def sweep(block, n_blocks, stack_size, reps, kernel="ref"):
     return rows
 
 
+BIN_CAPS = (1, 2, 4, 8)
+
+
+def bin_cap_sweep(block, n_blocks, stack_size, reps, kernel="ref",
+                  fill=0.05):
+    """Sweep the executor's size-bin cap on a ragged low-fill plan
+    (one dense mask row on top of a sparse background makes the run
+    lengths wildly ragged, the regime binning exists for)."""
+    # the sweep needs enough blocks (and a tight enough stack cap) for
+    # the plan to actually go multi-stack and ragged — the smoke
+    # geometry alone collapses to one short stack
+    n_blocks = max(n_blocks, 16)
+    stack_size = min(stack_size, 2 * n_blocks)
+    m = block * n_blocks
+    rng = np.random.RandomState(1)
+    a_mask = rng.rand(n_blocks, n_blocks) < fill
+    b_mask = rng.rand(n_blocks, n_blocks) < fill
+    a_mask[0, :] = True  # ragged: one dense row among sparse runs
+    a = rng.randn(m, m).astype(np.float32) \
+        * np.repeat(np.repeat(a_mask, block, 0), block, 1)
+    b = rng.randn(m, m).astype(np.float32) \
+        * np.repeat(np.repeat(b_mask, block, 0), block, 1)
+    ab = to_blocks(jnp.asarray(a), block, block)
+    bb = to_blocks(jnp.asarray(b), block, block)
+    c0 = jnp.zeros((n_blocks * n_blocks, block, block), jnp.float32)
+
+    rows = []
+    for cap in BIN_CAPS:
+        plan = build_executor_plan(m, m, m, block, block, block, stack_size,
+                                   a_mask=a_mask, b_mask=b_mask,
+                                   stack_bins=cap)
+        t = time_call(
+            jax.jit(lambda ab, bb, c0, p=plan: execute_plan(
+                p, ab, bb, c0, kernel=kernel)), ab, bb, c0, reps=reps)
+        rows.append({
+            "stack_bins": cap,
+            "n_bins": plan.n_bins,
+            "n_entries": plan.n_entries,
+            "n_padding": plan.n_padding,
+            "n_padding_unbinned": plan.n_padding_unbinned,
+            "t_dispatch_s": t,
+        })
+        print(f"stack_bins {cap}: {plan.n_bins} bins  "
+              f"padding {plan.n_padding:6d} "
+              f"(unbinned {plan.n_padding_unbinned})  "
+              f"dispatch {t*1e3:8.2f} ms")
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -126,12 +181,19 @@ def main():
         n_blocks = args.n_blocks
 
     rows = sweep(block, n_blocks, stack_size, reps)
+    print("-- stack-bin cap sweep (ragged low fill) --")
+    bin_rows = bin_cap_sweep(block, n_blocks, stack_size, reps)
+    # padding must be non-increasing in the cap (refinement property)
+    paddings = [r["n_padding"] for r in bin_rows]
     times = [r["t_sparse_s"] for r in rows]  # FILLS is descending
     result = {
         "block": block,
         "n_blocks": n_blocks,
         "stack_size": stack_size,
         "rows": rows,
+        "bin_sweep": bin_rows,
+        "bin_padding_monotone": all(
+            paddings[i] >= paddings[i + 1] for i in range(len(paddings) - 1)),
         # 10% relative slack + 1 ms absolute floor: interpret-mode
         # timings of near-equal sub-ms plans jitter by multiples of
         # themselves (the floor matches the planner/overlap gates); a
@@ -147,9 +209,13 @@ def main():
         json.dump(result, f, indent=1)
     print(f"monotonic dispatch time over falling occupancy: "
           f"{result['monotonic_dispatch_time']}")
+    print(f"bin-cap padding non-increasing: "
+          f"{result['bin_padding_monotone']}")
     print("wrote ->", path)
     if args.check and not result["monotonic_dispatch_time"]:
         raise SystemExit("sparse dispatch time did not fall with occupancy")
+    if args.check and not result["bin_padding_monotone"]:
+        raise SystemExit("size-bin padding grew with a larger bin cap")
 
 
 if __name__ == "__main__":

@@ -17,6 +17,7 @@ BENCHES = [
     ("IV-A grid configuration", "benchmarks.bench_grid_config"),
     ("IV-B blocked vs densified", "benchmarks.bench_densify"),
     ("block-sparse occupancy sweep", "benchmarks.bench_sparse"),
+    ("norm filtering eps sweep + purification", "benchmarks.bench_filter"),
     ("multiply planner regret (auto vs fixed)", "benchmarks.bench_planner"),
     ("schedule-engine pipeline depth (comm/compute overlap)",
      "benchmarks.bench_overlap"),

@@ -1,0 +1,95 @@
+"""Density-matrix purification — the sparsity-evolving workload
+norm-based filtering exists for (CP2K's linear-scaling SCF on DBCSR).
+
+McWeeny's iteration  P <- 3 P^2 - 2 P^3  is run end to end through
+``dbcsr.multiply(filter_eps=1e-6)`` on a 4-device (2x2) mesh:
+
+  * the Hamiltonian is a gapped block-banded insulator
+    (repro.sparsity.workloads.banded_hamiltonian); the initial guess is
+    its linear spectral rescale, support = the Hamiltonian's band,
+  * every multiply computes per-block Frobenius norms, drops
+    contributions with norm(A_ik) * norm(B_kj) < eps before they reach
+    a multiplication stack, skips data-exchange steps with no retained
+    triple, and the planner prices candidates with the norm-predicted
+    retained occupancy,
+  * each iterate is re-filtered from its actual block norms
+    (``DBCSRMatrix.filter``, the post-multiply pass).
+
+The printed trace is the canonical purification signature: occupancy
+RISES for an iteration or two (P^2 spreads the band), then DECAYS
+monotonically to the converged density's support (here: exactly the
+diagonal) while the idempotency error ||P^2 - P|| crashes to zero and
+tr(P) stays pinned at the electron count.
+
+    PYTHONPATH=src python examples/purification.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import time
+
+import numpy as np
+
+from repro.compat import make_mesh
+from repro.core import dbcsr
+from repro.core.blocking import GridSpec
+from repro.sparsity.workloads import (banded_hamiltonian, initial_density,
+                                      mcweeny_purify)
+
+N_ITER = 10
+FILTER_EPS = 1e-6
+
+
+def main():
+    n, bs = 512, 32
+    H, mask = banded_hamiltonian(n, bs)
+    P0_host = initial_density(H)
+
+    mesh = make_mesh((2, 2), ("data", "model"))
+    grid = GridSpec("data", "model")
+    P0 = dbcsr.create(P0_host.astype(np.float32), mesh=mesh, grid=grid,
+                      block_size=bs, block_mask=mask)
+    nb = P0.layout.nblock_rows
+    print(f"== McWeeny purification: {n}x{n}, {nb}x{nb} blocks of {bs}, "
+          f"2x2 mesh, filter_eps={FILTER_EPS:g} ==")
+    print(f"initial guess: occupancy {P0.occupancy:.4f} "
+          f"({int(mask.sum())}/{nb * nb} blocks), "
+          f"tr(P0) = {float(P0.trace()):.2f} (electrons: {n // 2})")
+
+    t0 = time.time()
+    P, trace = mcweeny_purify(
+        P0, mesh=mesh, n_iter=N_ITER, filter_eps=FILTER_EPS,
+        # blocked path + jnp reference kernel: the stack executor runs
+        # the eps-filtered plans (interpret-mode Pallas is the same
+        # math, just slower on this host container)
+        multiply_kw=dict(densify=False, local_kernel="ref"))
+    dt = time.time() - t0
+
+    print(f"{'iter':>4s} {'occupancy':>10s} {'blocks':>7s} "
+          f"{'retained':>9s} {'filtered':>9s} {'MFLOP_kept':>10s} "
+          f"{'idempotency':>12s} {'tr(P)':>8s}")
+    for t in trace:
+        print(f"{t['iteration']:4d} {t['occupancy']:10.4f} "
+              f"{t['n_blocks']:7d} {t.get('n_retained_triples', 0):9d} "
+              f"{t.get('n_norm_filtered_triples', 0):9d} "
+              f"{t.get('retained_flops', 0) / 1e6:10.2f} "
+              f"{t['idempotency']:12.3e} {t['trace_P']:8.2f}")
+    print(f"{N_ITER} iterations in {dt:.1f} s")
+
+    occs = [t["occupancy"] for t in trace]
+    peak = occs.index(max(occs))
+    monotone = all(occs[i + 1] <= occs[i] + 1e-12
+                   for i in range(peak, len(occs) - 1))
+    decayed = occs[-1] < occs[0]
+    print(f"occupancy peaks at iteration {peak} "
+          f"({occs[peak]:.4f}), converges to {occs[-1]:.4f}")
+    print(f"monotone decay after the peak: {monotone}   "
+          f"net sparsification vs initial guess: {decayed}")
+    assert monotone and decayed, \
+        "purification occupancy did not decay monotonically after the peak"
+    assert abs(trace[-1]["trace_P"] - n // 2) < 0.5, "electron count drifted"
+    print("purification trace OK")
+
+
+if __name__ == "__main__":
+    main()

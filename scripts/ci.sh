@@ -15,7 +15,17 @@ python -m pytest -x -q
 # occupancy-aware stacks: the sparse dispatch win is tracked in the
 # bench trajectory (artifacts/bench/sparse_smoke.json) and gated —
 # --check fails the build if dispatch time stops falling with occupancy
+# (also sweeps the executor's size-bin cap: padding must not grow with
+# a larger cap)
 python benchmarks/bench_sparse.py --smoke --check
+
+# norm-based on-the-fly filtering (repro.sparsity): eps sweep +
+# McWeeny purification trace (artifacts/bench/filter_smoke.json) —
+# --check fails the build if retained triples stop falling with eps,
+# if the 5%-retention dispatch is slower than the unfiltered one
+# beyond the jitter floor, or if the purification occupancy stops
+# decaying after its peak
+python benchmarks/bench_filter.py --smoke --check
 
 # multiply planner: recalibrates the cost model on this machine, sweeps
 # square/tall/skinny x occupancy fills, and gates planner regret — the

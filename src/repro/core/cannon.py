@@ -42,7 +42,8 @@ from .blocking import GridSpec
 from .schedule import (RolledSpec, Schedule, execute_schedule,
                        resolve_pipeline_depth)
 
-__all__ = ["cannon_matmul", "build_cannon_schedule", "cannon_step_masks"]
+__all__ = ["cannon_matmul", "build_cannon_schedule", "cannon_step_masks",
+           "cannon_step_norms"]
 
 
 def _skew_perm(pg: int, which: str):
@@ -173,6 +174,50 @@ def cannon_step_masks(
                         continue
                     bc = bm[q * lk:(q + 1) * lk, j * lc:(j + 1) * lc]
                     pair |= ac[:, :, None] & bc[None, :, :]
+        out.append(pair)
+    return out
+
+
+def cannon_step_norms(
+    an: np.ndarray, bn: np.ndarray, pg: int, c_repl: int = 1,
+) -> List[np.ndarray]:
+    """Per-shift-step local pair NORM-PRODUCT tensors for (2.5D) Cannon
+    — the norm twin of ``cannon_step_masks`` for the on-the-fly filter
+    (repro.sparsity).
+
+    Where the mask builder unions per-rank *presence* (SPMD: the step
+    plan must cover every rank), the norm builder takes the per-rank
+    MAX of ``norm(A_ik) * norm(B_kj)`` — union-of-max.  A triple is
+    then dropped by ``filter_eps`` only when it falls below eps on
+    EVERY rank sharing the traced program: the tightest SPMD-uniform
+    filter, conservative in exactly the way the mask union is.
+    """
+    nbr, nbk = an.shape
+    nbc = bn.shape[1]
+    if nbr % pg or nbk % pg or nbc % pg:
+        raise ValueError(
+            f"block grid ({nbr},{nbk},{nbc}) not divisible by cannon grid "
+            f"side {pg}")
+    if c_repl < 1 or pg % c_repl:
+        raise ValueError(f"grid side {pg} not divisible by replication {c_repl}")
+    an = np.asarray(an, dtype=np.float32)
+    bn = np.asarray(bn, dtype=np.float32)
+    lr, lk, lc = nbr // pg, nbk // pg, nbc // pg
+    spr = pg // c_repl
+    out = []
+    for t in range(spr):
+        pair = np.zeros((lr, lk, lc), dtype=np.float32)
+        for p in range(c_repl):
+            off = t + p * spr
+            for i in range(pg):
+                for j in range(pg):
+                    q = (i + j + off) % pg
+                    ac = an[i * lr:(i + 1) * lr, q * lk:(q + 1) * lk]
+                    if not ac.any():
+                        continue
+                    bc = bn[q * lk:(q + 1) * lk, j * lc:(j + 1) * lc]
+                    np.maximum(pair, ac[:, :, None] * bc[None, :, :],
+                               out=pair)
         out.append(pair)
     return out
 

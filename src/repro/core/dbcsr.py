@@ -34,10 +34,14 @@ __all__ = ["DBCSRMatrix", "create", "multiply", "multiply_vector",
 class DBCSRMatrix:
     """A distributed blocked matrix.
 
-    data      : (rows, cols) jax.Array, sharded P(row_axis, col_axis)
-    layout    : block structure metadata
-    grid      : mesh-axis names of the process grid
-    block_mask: optional (nbr, nbc) numpy bool — block-sparse occupancy
+    data       : (rows, cols) jax.Array, sharded P(row_axis, col_axis)
+    layout     : block structure metadata
+    grid       : mesh-axis names of the process grid
+    block_mask : optional (nbr, nbc) numpy bool — block-sparse occupancy
+    block_norms: optional (nbr, nbc) numpy float32 — per-block Frobenius
+                 norms (repro.sparsity), lazily computed/cached by
+                 ``norms()`` and consumed by the ``filter_eps`` multiply
+                 path and ``filter()``
 
     Products returned by ``multiply`` additionally carry the executed
     ``MultiplyPlan`` as a plain ``last_plan`` attribute (host-side
@@ -48,24 +52,34 @@ class DBCSRMatrix:
     layout: BlockLayout
     grid: GridSpec
     block_mask: Optional[np.ndarray] = None
+    block_norms: Optional[np.ndarray] = None
 
     # -- pytree protocol (data is a leaf; the rest is static) ----------
     def tree_flatten(self):
-        # the mask rides in aux as (shape, bytes): hashable (jit cache
-        # key) AND sufficient to reconstruct the array on unflatten, so
-        # block sparsity survives jit/vmap/scan round-trips.
+        # mask AND norms ride in aux as (shape, bytes): hashable (jit
+        # cache key) AND sufficient to reconstruct the arrays on
+        # unflatten, so block sparsity — and its norms — survive
+        # jit/vmap/scan round-trips.
         mask_aux = (None if self.block_mask is None
                     else (self.block_mask.shape, self.block_mask.tobytes()))
-        return (self.data,), (self.layout, self.grid, mask_aux)
+        norms_aux = None
+        if self.block_norms is not None:
+            norms = np.ascontiguousarray(self.block_norms, dtype=np.float32)
+            norms_aux = (norms.shape, norms.tobytes())
+        return (self.data,), (self.layout, self.grid, mask_aux, norms_aux)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        layout, grid, mask_aux = aux
+        layout, grid, mask_aux, norms_aux = aux
         mask = None
         if mask_aux is not None:
             shape, raw = mask_aux
             mask = np.frombuffer(raw, dtype=bool).reshape(shape).copy()
-        return cls(children[0], layout, grid, mask)
+        norms = None
+        if norms_aux is not None:
+            shape, raw = norms_aux
+            norms = np.frombuffer(raw, dtype=np.float32).reshape(shape).copy()
+        return cls(children[0], layout, grid, mask, norms)
 
     # -- DBCSR-like API -------------------------------------------------
     @property
@@ -78,17 +92,62 @@ class DBCSRMatrix:
             return 1.0
         return float(self.block_mask.mean())
 
+    def norms(self, recompute: bool = False) -> np.ndarray:
+        """Per-block Frobenius norms ((nbr, nbc) float32 numpy), cached
+        on the matrix after the first call (one blockwise device
+        reduction per geometry — repro.sparsity.norms).  Mask-absent
+        blocks report 0.  Pass ``recompute=True`` after mutating
+        ``data`` through a non-DBCSR op (the cache cannot observe
+        that)."""
+        if self.block_norms is None or recompute:
+            from repro.sparsity.norms import block_norms_of
+
+            self.block_norms = block_norms_of(
+                self.data, self.layout.block_rows, self.layout.block_cols,
+                self.block_mask)
+        return self.block_norms
+
+    def filter(self, eps: float) -> "DBCSRMatrix":
+        """DBCSR's post-multiply filtering pass: re-derive the
+        occupancy from the *actual* block norms, dropping every block
+        with ``norm < eps`` (blocks exactly at eps survive, matching
+        the triple-filter contract), zeroing the dropped blocks'
+        payload so dense math keeps matching sparse semantics.  Never
+        resurrects a block the current mask declares absent."""
+        norms = self.norms()
+        mask = norms >= float(eps)
+        if self.block_mask is not None:
+            mask &= self.block_mask
+        bs_r, bs_c = self.layout.block_rows, self.layout.block_cols
+        full = np.repeat(np.repeat(mask, bs_r, 0), bs_c, 1)
+        data = self.data * jnp.asarray(full, dtype=self.data.dtype)
+        new_norms = np.where(mask, norms, np.float32(0.0)).astype(np.float32)
+        return DBCSRMatrix(data, self.layout, self.grid, mask, new_norms)
+
     def transpose(self) -> "DBCSRMatrix":
         layout = BlockLayout(self.layout.cols, self.layout.rows,
                              self.layout.block_cols, self.layout.block_rows)
         mask = None if self.block_mask is None else self.block_mask.T.copy()
-        return DBCSRMatrix(self.data.T, layout, self.grid, mask)
+        norms = (None if self.block_norms is None
+                 else self.block_norms.T.copy())
+        return DBCSRMatrix(self.data.T, layout, self.grid, mask, norms)
 
     def trace(self) -> jax.Array:
         return jnp.trace(self.data)
 
     def scale(self, alpha) -> "DBCSRMatrix":
-        return dataclasses.replace(self, data=self.data * alpha)
+        norms = None
+        if self.block_norms is not None:
+            try:
+                # |alpha| rescales Frobenius norms exactly — but only a
+                # concrete scalar can update the host-side cache; under
+                # a tracer the cache is dropped (recomputed lazily)
+                norms = (self.block_norms
+                         * np.float32(abs(float(alpha)))).astype(np.float32)
+            except Exception:  # traced alpha cannot reach host numpy
+                norms = None
+        return dataclasses.replace(self, data=self.data * alpha,
+                                   block_norms=norms)
 
 
 def _sharding(mesh: Mesh, grid: GridSpec) -> NamedSharding:
@@ -102,9 +161,12 @@ def create(
     grid: GridSpec = GridSpec(),
     block_size: int = 64,
     block_mask: Optional[np.ndarray] = None,
+    compute_norms: bool = False,
 ) -> DBCSRMatrix:
     """Create a DBCSR matrix from a host/global array (library owns the
-    distribution, like dbcsr_create + dbcsr_put_block)."""
+    distribution, like dbcsr_create + dbcsr_put_block).
+    ``compute_norms=True`` eagerly populates the per-block Frobenius
+    norm cache (otherwise ``norms()`` computes it on first use)."""
     rows, cols = array.shape
     layout = BlockLayout(rows, cols, block_size, block_size)
     data = jax.device_put(array, _sharding(mesh, grid))
@@ -114,7 +176,10 @@ def create(
         # zero out absent blocks so dense math matches sparse semantics
         mask_full = np.repeat(np.repeat(block_mask, block_size, 0), block_size, 1)
         data = data * jnp.asarray(mask_full, dtype=data.dtype)
-    return DBCSRMatrix(data, layout, grid, block_mask)
+    out = DBCSRMatrix(data, layout, grid, block_mask)
+    if compute_norms:
+        out.norms()
+    return out
 
 
 def add(a: DBCSRMatrix, b: DBCSRMatrix) -> DBCSRMatrix:
@@ -125,6 +190,11 @@ def add(a: DBCSRMatrix, b: DBCSRMatrix) -> DBCSRMatrix:
     dense and the result mask is deliberately ``None`` — not a dropped
     mask, but the correct all-present occupancy (contrast multiply(),
     where a one-sided mask does constrain the product's support).
+
+    Norms are NOT propagated: ``||A + B||_F`` per block is not
+    derivable from the operands' norms (only bounded), and the cache
+    must never hold a bound where ``filter()`` expects the truth — the
+    result recomputes lazily via ``norms()``.
     """
     mask = None
     if a.block_mask is not None and b.block_mask is not None:
@@ -156,6 +226,7 @@ def multiply(
     mesh: Mesh,
     algorithm: str = "auto",
     densify: Optional[bool] = None,
+    filter_eps: Optional[float] = None,
     return_plan: bool = False,
     **kw,
 ) -> DBCSRMatrix:
@@ -173,33 +244,73 @@ def multiply(
     operand mask treated as all-present, so a single masked operand
     still constrains the product's support.
 
+    ``filter_eps`` — norm-based on-the-fly filtering (repro.sparsity),
+    the interaction with ``block_mask`` being strictly *subtractive*:
+
+      * the binary masks still decide which blocks exist at all; on top
+        of them, product contributions with ``norm(A_ik) * norm(B_kj) <
+        filter_eps`` are dropped before they reach a multiplication
+        stack (operand norms come from ``norms()``, computed on the fly
+        when not already cached),
+      * the result's ``block_mask`` is the *retained* support — C
+        blocks with at least one surviving contribution — which is a
+        subset of the symbolic mask product, and the payload is zeroed
+        outside it (so the mask/zeros invariant holds on the densified
+        path too, whose single big GEMM does not drop triples),
+      * ``filter_eps=0.0`` retains everything: identical result, mask
+        and payload to the unfiltered path; ``None`` (default) disables
+        the norm machinery entirely,
+      * per-block truncation error is bounded by ``nbk * filter_eps``
+        (at most nbk dropped contributions, each below eps).
+
     The executed plan is observable without re-deriving it: the product
     carries it as ``C.last_plan`` (a ``MultiplyPlan`` with per-candidate
-    predicted costs via ``.explain()`` and the executed blocked-path
-    stack statistics as ``.executor_stats``), and ``return_plan=True``
-    additionally returns ``(C, plan)``.  ``last_plan`` is a plain
-    host-side attribute — it does not survive pytree flatten/jit
-    round-trips (only ``data``/``layout``/``grid``/``block_mask`` do).
+    predicted costs via ``.explain()``, the executed blocked-path stack
+    statistics as ``.executor_stats`` — including retained-vs-filtered
+    triple counts under eps), and ``return_plan=True`` additionally
+    returns ``(C, plan)``.  ``last_plan`` is a plain host-side
+    attribute — it does not survive pytree flatten/jit round-trips
+    (only ``data``/``layout``/``grid``/``block_mask``/``block_norms``
+    do).
     """
     from .multiply import distributed_matmul
 
+    an = bn = None
+    if filter_eps is not None:
+        an, bn = a.norms(), b.norms()
     c_data, plan = distributed_matmul(
         a.data, b.data, mesh=mesh, grid=a.grid,
         algorithm=algorithm, densify=densify,
         block_m=a.layout.block_rows, block_k=a.layout.block_cols,
         block_n=b.layout.block_cols,
-        a_mask=a.block_mask, b_mask=b.block_mask, return_plan=True, **kw,
+        a_mask=a.block_mask, b_mask=b.block_mask,
+        a_norms=an, b_norms=bn, filter_eps=filter_eps,
+        return_plan=True, **kw,
     )
     c_layout = BlockLayout(a.layout.rows, b.layout.cols,
                            a.layout.block_rows, b.layout.block_cols)
     mask = None
-    if a.block_mask is not None or b.block_mask is not None:
+    if (a.block_mask is not None or b.block_mask is not None
+            or filter_eps is not None):
         from .stacks import normalize_block_masks
 
         am, bm = normalize_block_masks(
             a.layout.nblock_rows, a.layout.nblock_cols,
             b.layout.nblock_cols, a.block_mask, b.block_mask)
-        mask = (am.astype(np.int64) @ bm.astype(np.int64)) > 0
+        if filter_eps is not None:
+            from repro.sparsity.filter import product_mask
+
+            mask = product_mask(am, bm, an, bn, filter_eps)
+            # enforce the mask/zeros invariant — load-bearing on BOTH
+            # local paths: the densified GEMM computes sub-eps blocks
+            # the retained mask excludes, and the blocked path's SPMD
+            # union-of-max steps let a rank deposit small contributions
+            # into blocks outside the global retained support
+            full = np.repeat(np.repeat(mask, a.layout.block_rows, 0),
+                             b.layout.block_cols, 1)
+            c_data = c_data * jnp.asarray(full, dtype=c_data.dtype)
+        else:
+            mask = (am.astype(np.int64) @ bm.astype(np.int64)) > 0
     c = DBCSRMatrix(c_data, c_layout, a.grid, mask)
     c.last_plan = plan
     return (c, plan) if return_plan else c

@@ -112,17 +112,25 @@ def blocked_local_matmul(
     a_mask=None,
     b_mask=None,
     pair_mask=None,
+    a_norms=None,
+    b_norms=None,
+    pair_norms=None,
+    filter_eps: Optional[float] = None,
+    stack_bins: Optional[int] = None,
 ):
     """Local multiply for the blocked path.
 
     Delegates to the fused stack executor (core/engine.py): one memoized
-    plan build per geometry (and per occupancy-mask fingerprint), one
-    ``lax.scan`` over padded stacks, one smm trace per block geometry.
-    ``stack_size`` / ``align`` default to the autotune winners table for
-    this block geometry and occupancy bin.  Occupancy masks
+    plan build per geometry (and per occupancy-mask/norm fingerprint),
+    one ``lax.scan`` over padded stacks, one smm trace per block
+    geometry.  ``stack_size`` / ``align`` default to the autotune
+    winners table for this block geometry and occupancy bin;
+    ``stack_bins`` caps the executor's size-bin count (None: the
+    DBCSR_STACK_BINS env or 4).  Occupancy masks
     (``a_mask``/``b_mask``/``pair_mask``, host-side numpy bool) restrict
     the plan to present triples — see the sparse planning contract in
-    core/engine.py.
+    core/engine.py — and block norms + ``filter_eps`` apply DBCSR's
+    norm-product on-the-fly filter on top (repro.sparsity).
 
     kernel='smm'  -> Pallas LIBCUSMM-analogue (interpret-mode on CPU)
     kernel='ref'  -> pure-jnp gather/segment-sum oracle (same math)
@@ -133,4 +141,6 @@ def blocked_local_matmul(
         m, k, n, block_m=block_m, block_k=block_k, block_n=block_n,
         stack_size=stack_size, align=align, kernel=kernel,
         a_mask=a_mask, b_mask=b_mask, pair_mask=pair_mask,
+        a_norms=a_norms, b_norms=b_norms, pair_norms=pair_norms,
+        filter_eps=filter_eps, stack_bins=stack_bins,
     )

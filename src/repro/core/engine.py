@@ -60,6 +60,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import hashlib
+import os
 from typing import List, Optional, Tuple
 
 import jax
@@ -75,6 +76,7 @@ __all__ = [
     "build_executor_plan",
     "execute_plan",
     "execute_plans_looped",
+    "resolve_stack_bins",
     "stack_executor",
 ]
 
@@ -123,6 +125,11 @@ class ExecutorPlan:
     nbk: int
     nbc: int
     plans: Tuple[StackPlan, ...]
+    # -- norm filtering (repro.sparsity): eps the plan was built under
+    # and the triple count the binary masks ALONE would have dispatched
+    # (None when no norm filter was applied) --------------------------
+    filter_eps: Optional[float] = None
+    n_unfiltered_entries: Optional[int] = None
 
     @property
     def triples(self) -> np.ndarray:
@@ -177,12 +184,21 @@ class ExecutorPlan:
         dense = self.n_dense_triples
         return self.n_entries / dense if dense else 1.0
 
+    @property
+    def n_norm_filtered_triples(self) -> int:
+        """Mask-present triples the norm filter dropped (0 when the
+        plan was built without norms)."""
+        if self.n_unfiltered_entries is None:
+            return 0
+        return self.n_unfiltered_entries - self.n_entries
+
     def stats(self) -> dict:
         from .stacks import stack_statistics
 
         s = stack_statistics(
             list(self.plans),
             stack_tile=self.stack_tile if self.plans else None)
+        s["n_entries"] = self.n_entries
         s["n_dense_triples"] = self.n_dense_triples
         s["n_skipped_triples"] = self.n_skipped_triples
         s["occupancy"] = self.occupancy
@@ -198,15 +214,27 @@ class ExecutorPlan:
         if self.plans:
             padded_total = self.n_entries + self.n_padding
             s["fill"] = self.n_entries / padded_total if padded_total else 1.0
+        # norm-filter accounting (repro.sparsity): retained vs filtered
+        # triples and the FLOPs the on-the-fly filter removed
+        s["filter_eps"] = self.filter_eps
+        if self.n_unfiltered_entries is not None:
+            filtered = self.n_norm_filtered_triples
+            s["n_unfiltered_triples"] = self.n_unfiltered_entries
+            s["n_norm_filtered_triples"] = filtered
+            s["norm_filtered_flops"] = filtered * flop_per_entry
+            s["norm_retained_fraction"] = (
+                self.n_entries / self.n_unfiltered_entries
+                if self.n_unfiltered_entries else 1.0)
         return s
 
 
-# Masks are numpy bool arrays — unhashable, so the plan memo keys on a
-# content fingerprint (shape, sha1(bytes)).  The arrays themselves are
-# staged here only for the duration of a build_executor_plan call (the
-# cached builder reads them on a memo miss); nothing retains the
-# caller's masks afterwards, and masked-plan retention is bounded by
-# the LRU below rather than growing with every distinct mask ever seen.
+# Masks and norms are numpy arrays — unhashable, so the plan memo keys
+# on a content fingerprint (shape, dtype, sha1(bytes)).  The arrays
+# themselves are staged here only for the duration of a
+# build_executor_plan call (the cached builder reads them on a memo
+# miss); nothing retains the caller's arrays afterwards, and plan
+# retention is bounded by the LRU below rather than growing with every
+# distinct mask/norm pattern ever seen.
 _STAGED_MASKS: dict = {}
 
 # Distinct dense geometries are few, but masked keys are open-ended
@@ -216,16 +244,48 @@ _STAGED_MASKS: dict = {}
 _PLAN_CACHE_SIZE = 1024
 
 
-def _mask_fingerprint(mask: Optional[np.ndarray]):
-    """Fingerprint a *private copy* of the mask — the caller's array is
-    never retained or frozen, so callers may mutate their masks between
-    multiplies (each content change simply fingerprints anew)."""
-    if mask is None:
+def _array_fingerprint(arr: Optional[np.ndarray], dtype):
+    """Fingerprint a *private copy* of a host array — the caller's
+    array is never retained or frozen, so callers may mutate their
+    masks/norms between multiplies (each content change simply
+    fingerprints anew)."""
+    if arr is None:
         return None
-    m = np.array(mask, dtype=bool, order="C")  # always a fresh copy
-    fp = (m.shape, hashlib.sha1(m.tobytes()).hexdigest())
+    m = np.array(arr, dtype=dtype, order="C")  # always a fresh copy
+    fp = (m.shape, str(m.dtype), hashlib.sha1(m.tobytes()).hexdigest())
     _STAGED_MASKS.setdefault(fp, m)
     return fp
+
+
+def _mask_fingerprint(mask: Optional[np.ndarray]):
+    return _array_fingerprint(mask, bool)
+
+
+def _norm_fingerprint(norms: Optional[np.ndarray]):
+    # norms always fingerprint as float32 (the dtype sparsity/norms.py
+    # computes) so equal content hits one plan regardless of input dtype
+    return _array_fingerprint(norms, np.float32)
+
+
+# One lax.scan (and one traced kernel body) runs per stack-length bin,
+# so the bin count is capped.  4 bins (the default) bounds the extra
+# traces while capturing most of the padding win (stack sizes within a
+# bin differ by at most 2x); ``stack_bins=`` / DBCSR_STACK_BINS
+# override it — benchmarks/bench_sparse.py sweeps the cap.
+_MAX_SIZE_BINS = 4
+
+
+def resolve_stack_bins(stack_bins: Optional[int] = None) -> int:
+    """The executor's size-bin cap: explicit kwarg > DBCSR_STACK_BINS
+    env > the default (4).  1 disables binning (the pre-PR4 single
+    padded tensor); higher values trade extra scan traces for less
+    padding at low fill."""
+    if stack_bins is None:
+        stack_bins = int(os.environ.get("DBCSR_STACK_BINS", _MAX_SIZE_BINS))
+    stack_bins = int(stack_bins)
+    if stack_bins < 1:
+        raise ValueError(f"stack_bins must be >= 1, got {stack_bins}")
+    return stack_bins
 
 
 def build_executor_plan(
@@ -239,34 +299,40 @@ def build_executor_plan(
     a_mask: Optional[np.ndarray] = None,
     b_mask: Optional[np.ndarray] = None,
     pair_mask: Optional[np.ndarray] = None,
+    a_norms: Optional[np.ndarray] = None,
+    b_norms: Optional[np.ndarray] = None,
+    pair_norms: Optional[np.ndarray] = None,
+    filter_eps: Optional[float] = None,
+    stack_bins: Optional[int] = None,
 ) -> ExecutorPlan:
     """Generation + Scheduler phases for the local (m, k) x (k, n)
     multiply, memoized: repeated multiplies of the same geometry
     (training steps, benchmark reps, repeated cannon shifts with the
     same occupancy pattern) never rebuild the numpy plans.  Occupancy
-    masks participate in the memo key by content fingerprint (see
-    module docstring: sparse planning contract).
+    masks AND block norms participate in the memo key by content
+    fingerprint (see module docstring: sparse planning contract);
+    ``filter_eps`` follows the repro.sparsity contract (triples whose
+    norm product is < eps are dropped; None disables filtering,
+    0.0 is bit-identical to the mask-only plan).
     """
+    eps = None if filter_eps is None else float(filter_eps)
+    bins_cap = resolve_stack_bins(stack_bins)
     fps = (_mask_fingerprint(a_mask), _mask_fingerprint(b_mask),
-           _mask_fingerprint(pair_mask))
+           _mask_fingerprint(pair_mask), _norm_fingerprint(a_norms),
+           _norm_fingerprint(b_norms), _norm_fingerprint(pair_norms))
     try:
         return _build_executor_plan_cached(
-            m, k, n, block_m, block_k, block_n, stack_size, *fps)
+            m, k, n, block_m, block_k, block_n, stack_size, *fps,
+            eps, bins_cap)
     finally:
         for fp in fps:
             if fp is not None:
                 _STAGED_MASKS.pop(fp, None)
 
 
-# One lax.scan (and one traced kernel body) runs per stack-length bin,
-# so the bin count is capped: 4 bins bounds the extra traces while
-# capturing most of the padding win (stack sizes within a bin differ by
-# at most 2x).
-_MAX_SIZE_BINS = 4
-
-
-def _size_binned(plans: List[StackPlan]) -> Tuple[np.ndarray, ...]:
-    """Group stack plans into <= _MAX_SIZE_BINS power-of-two length bins
+def _size_binned(plans: List[StackPlan],
+                 max_bins: int = _MAX_SIZE_BINS) -> Tuple[np.ndarray, ...]:
+    """Group stack plans into <= ``max_bins`` power-of-two length bins
     and pad each bin to its own longest stack (ragged-aware stack_tile).
 
     Uniform stack sizes (the dense regime) collapse to a single bin
@@ -276,7 +342,7 @@ def _size_binned(plans: List[StackPlan]) -> Tuple[np.ndarray, ...]:
     one stack, so cross-bin execution order cannot change any result.
     """
     sizes = [p.size for p in plans]
-    if len(set(sizes)) <= 1:
+    if len(set(sizes)) <= 1 or max_bins <= 1:
         return (pad_plans(plans),)
     # engage binning only when the single-tile layout wastes >= 25% of
     # its dispatched rows on padding: a dense plan's short final stack
@@ -287,7 +353,7 @@ def _size_binned(plans: List[StackPlan]) -> Tuple[np.ndarray, ...]:
         return (pad_plans(plans),)
     keys = [max(s, 1).bit_length() for s in sizes]
     shift = 0
-    while len(set(k >> shift for k in keys)) > _MAX_SIZE_BINS:
+    while len(set(k >> shift for k in keys)) > max_bins:
         # halve the log-resolution until the bin count fits the cap
         shift += 1
     keys = [k >> shift for k in keys]
@@ -310,21 +376,45 @@ def _build_executor_plan_cached(
     a_fp,
     b_fp,
     pair_fp,
+    an_fp,
+    bn_fp,
+    pn_fp,
+    filter_eps: Optional[float],
+    stack_bins: int,
 ) -> ExecutorPlan:
     a_layout = BlockLayout(m, k, block_m, block_k)
     b_layout = BlockLayout(k, n, block_k, block_n)
+    staged = lambda fp: None if fp is None else _STAGED_MASKS[fp]
+    a_mask, b_mask, pair_mask = staged(a_fp), staged(b_fp), staged(pair_fp)
+    a_norms, b_norms, pair_norms = staged(an_fp), staged(bn_fp), staged(pn_fp)
+    filtering = filter_eps is not None and (
+        a_norms is not None or b_norms is not None or pair_norms is not None)
     plans = build_stacks(
         a_layout, b_layout, stack_size,
-        a_mask=None if a_fp is None else _STAGED_MASKS[a_fp],
-        b_mask=None if b_fp is None else _STAGED_MASKS[b_fp],
-        pair_mask=None if pair_fp is None else _STAGED_MASKS[pair_fp])
+        a_mask=a_mask, b_mask=b_mask, pair_mask=pair_mask,
+        a_norms=a_norms, b_norms=b_norms, pair_norms=pair_norms,
+        filter_eps=filter_eps)
     if plans:
-        bins = _size_binned(plans)
+        bins = _size_binned(plans, stack_bins)
     else:
-        # empty mask product: zero stacks, execute_plan is a no-op
+        # empty mask/filter product: zero stacks, execute_plan is a no-op
         bins = (np.zeros((0, 1, 4), dtype=np.int32),)
     for t in bins:
         t.setflags(write=False)  # memoized => shared; guard against mutation
+    n_unfiltered = None
+    if filtering:
+        # what the binary masks alone would have dispatched, so stats()
+        # can attribute the norm filter's extra skips
+        if pair_mask is not None:
+            n_unfiltered = int(np.count_nonzero(pair_mask))
+        else:
+            from .stacks import normalize_block_masks
+
+            am, bm = normalize_block_masks(
+                a_layout.nblock_rows, a_layout.nblock_cols,
+                b_layout.nblock_cols, a_mask, b_mask)
+            n_unfiltered = int(
+                (am.astype(np.int64) @ bm.astype(np.int64)).sum())
     return ExecutorPlan(
         bin_triples=bins,
         n_c_blocks=a_layout.nblock_rows * b_layout.nblock_cols,
@@ -335,6 +425,8 @@ def _build_executor_plan_cached(
         nbk=a_layout.nblock_cols,
         nbc=b_layout.nblock_cols,
         plans=tuple(plans),
+        filter_eps=filter_eps if filtering else None,
+        n_unfiltered_entries=n_unfiltered,
     )
 
 
@@ -420,19 +512,38 @@ def _mask_fill(
     a_mask: Optional[np.ndarray],
     b_mask: Optional[np.ndarray],
     pair_mask: Optional[np.ndarray],
+    a_norms: Optional[np.ndarray] = None,
+    b_norms: Optional[np.ndarray] = None,
+    pair_norms: Optional[np.ndarray] = None,
+    filter_eps: Optional[float] = None,
 ) -> float:
-    """Present-triple fraction of the dense grid (cheap, plan-free —
+    """Retained-triple fraction of the dense grid (cheap, plan-free —
     needed *before* plan construction to pick the occupancy-binned
-    autotune winner, whose stack_tile shapes the plan itself)."""
+    autotune winner, whose stack_tile shapes the plan itself).  With
+    norms and a ``filter_eps`` this is the NORM-PREDICTED fraction
+    (mask-present triples clearing the eps product bound), which is
+    also what the planner discounts blocked-path flops by."""
+    filtering = filter_eps is not None and (
+        a_norms is not None or b_norms is not None or pair_norms is not None)
+    size = nbr * nbk * nbc
+    if pair_norms is not None and filtering:
+        keep = pair_norms.astype(np.float64) >= float(filter_eps)
+        if pair_mask is not None:
+            keep &= pair_mask
+        return float(np.count_nonzero(keep)) / size
     if pair_mask is not None:
-        return float(np.count_nonzero(pair_mask)) / pair_mask.size
-    if a_mask is None and b_mask is None:
+        return float(np.count_nonzero(pair_mask)) / size
+    if a_mask is None and b_mask is None and not filtering:
         return 1.0
     from .stacks import normalize_block_masks
 
     am, bm = normalize_block_masks(nbr, nbk, nbc, a_mask, b_mask)
-    return float((am.astype(np.int64) @ bm.astype(np.int64)).sum()) \
-        / (nbr * nbk * nbc)
+    if filtering:
+        from repro.sparsity.filter import count_retained_triples
+
+        return count_retained_triples(am, bm, a_norms, b_norms,
+                                      filter_eps) / size
+    return float((am.astype(np.int64) @ bm.astype(np.int64)).sum()) / size
 
 
 def stack_executor(
@@ -449,6 +560,11 @@ def stack_executor(
     a_mask: Optional[np.ndarray] = None,
     b_mask: Optional[np.ndarray] = None,
     pair_mask: Optional[np.ndarray] = None,
+    a_norms: Optional[np.ndarray] = None,
+    b_norms: Optional[np.ndarray] = None,
+    pair_norms: Optional[np.ndarray] = None,
+    filter_eps: Optional[float] = None,
+    stack_bins: Optional[int] = None,
 ):
     """Build the fused blocked local multiply ``(a, b) -> c``.
 
@@ -458,12 +574,16 @@ def stack_executor(
     pin them.  Occupancy masks follow the sparse planning contract
     (module docstring): the executor dispatches only present triples;
     operands still arrive as full dense arrays with absent blocks
-    zeroed.
+    zeroed.  Block norms + ``filter_eps`` additionally drop triples by
+    the norm-product bound (repro.sparsity) — the fill the autotune bin
+    is resolved against is then the norm-predicted retained fraction.
+    ``stack_bins`` caps the executor's size bins (``resolve_stack_bins``).
     """
     from repro.kernels.smm.autotune import best_params_for
 
     fill = _mask_fill(m // block_m, k // block_k, n // block_n,
-                      a_mask, b_mask, pair_mask)
+                      a_mask, b_mask, pair_mask,
+                      a_norms, b_norms, pair_norms, filter_eps)
     tuned_align, tuned_tile = best_params_for(block_m, block_k, block_n,
                                               fill=fill)
     if align is None:
@@ -472,7 +592,9 @@ def stack_executor(
         stack_size = tuned_tile
     plan = build_executor_plan(m, k, n, block_m, block_k, block_n, stack_size,
                                a_mask=a_mask, b_mask=b_mask,
-                               pair_mask=pair_mask)
+                               pair_mask=pair_mask, a_norms=a_norms,
+                               b_norms=b_norms, pair_norms=pair_norms,
+                               filter_eps=filter_eps, stack_bins=stack_bins)
 
     def f(a: jax.Array, b: jax.Array) -> jax.Array:
         if a.shape != (m, k) or b.shape != (k, n):

@@ -44,15 +44,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from .blocking import GridSpec
-from .cannon import build_cannon_schedule, cannon_matmul, cannon_step_masks
+from .cannon import (build_cannon_schedule, cannon_matmul, cannon_step_masks,
+                     cannon_step_norms)
 from .cannon25d import build_cannon25d_schedule, cannon25d_matmul
 from .densify import blocked_local_matmul, densified_local_matmul
 from .schedule import resolve_pipeline_depth, schedule_step_meta
 from .stacks import normalize_block_masks
 from .summa import (build_summa_gather_schedule, build_summa_schedule,
-                    summa_gather_masks, summa_matmul, summa_n_panels,
-                    summa_step_masks)
-from .tall_skinny import build_ts_schedule, tall_skinny_matmul, ts_step_masks
+                    summa_gather_masks, summa_gather_norms, summa_matmul,
+                    summa_n_panels, summa_step_masks, summa_step_norms)
+from .tall_skinny import (build_ts_schedule, tall_skinny_matmul,
+                          ts_step_masks, ts_step_norms)
 
 __all__ = ["distributed_matmul"]
 
@@ -69,28 +71,60 @@ def _block_masks(
 
 
 def _masks_empty(mask_kwargs: dict) -> bool:
-    if "pair_mask" in mask_kwargs:
-        return not mask_kwargs["pair_mask"].any()
+    """Host-static per-step emptiness: no mask-present triple — or,
+    under a ``filter_eps`` with norms, no triple whose norm-product
+    bound clears eps (norm filtering can empty a step whose binary
+    masks are non-empty; the schedule driver then skips it exactly
+    like a mask-empty step)."""
+    eps = mask_kwargs.get("filter_eps")
+    if "pair_mask" in mask_kwargs or "pair_norms" in mask_kwargs:
+        pm = mask_kwargs.get("pair_mask")
+        if pm is not None and not pm.any():
+            return True
+        pn = mask_kwargs.get("pair_norms")
+        if eps and pn is not None:
+            kept = pn if pm is None else np.where(pm, pn, 0.0)
+            return not bool((kept.astype(np.float64) >= float(eps)).any())
+        return False
     ua, ub = mask_kwargs["a_mask"], mask_kwargs["b_mask"]
-    return not bool(np.any(ua.any(axis=0) & ub.any(axis=1)))
+    if not bool(np.any(ua.any(axis=0) & ub.any(axis=1))):
+        return True
+    un, vn = mask_kwargs.get("a_norms"), mask_kwargs.get("b_norms")
+    if eps and un is not None and vn is not None:
+        # max retained product per k: (max_i masked a) * (max_j masked b)
+        ka = np.where(ua, un.astype(np.float64), 0.0).max(axis=0)
+        kb = np.where(ub, vn.astype(np.float64), 0.0).max(axis=1)
+        return not bool((ka * kb >= float(eps)).any())
+    return False
 
 
 def _global_occupancy(
     m: int, k: int, n: int,
     block_m: int, block_k: int, block_n: int,
     a_mask: Optional[np.ndarray], b_mask: Optional[np.ndarray],
+    a_norms: Optional[np.ndarray] = None,
+    b_norms: Optional[np.ndarray] = None,
+    filter_eps: Optional[float] = None,
 ) -> float:
-    """Present-triple fraction of the global dense triple grid — the
-    occupancy the planner discounts blocked-path flops by.  An empty
-    mask product returns 0.0, which the planner short-circuits to a
-    trivial plan (the same contract as ``_masks_empty`` per step: the
-    blocked cost model must never divide by zero occupancy)."""
-    if a_mask is None and b_mask is None:
+    """Retained-triple fraction of the global dense triple grid — the
+    occupancy the planner discounts blocked-path flops by.  With block
+    norms and a ``filter_eps`` this is the NORM-PREDICTED fraction
+    (mask-present triples whose norm product clears eps), so the
+    planner's blocked-path discount reflects the on-the-fly filter, not
+    just binary occupancy.  An empty product returns 0.0, which the
+    planner short-circuits to a trivial plan — including the case where
+    eps filtering empties a product whose binary masks are non-empty
+    (the same contract as ``_masks_empty`` per step: the blocked cost
+    model must never divide by zero occupancy)."""
+    filtering = filter_eps is not None and (
+        a_norms is not None or b_norms is not None)
+    if a_mask is None and b_mask is None and not filtering:
         return 1.0
     from .engine import _mask_fill
 
     return _mask_fill(m // block_m, k // block_k, n // block_n,
-                      a_mask, b_mask, None)
+                      a_mask, b_mask, None,
+                      a_norms, b_norms, None, filter_eps)
 
 
 def _collect_executor_stats(lm, densify: bool) -> Optional[dict]:
@@ -104,6 +138,9 @@ def _collect_executor_stats(lm, densify: bool) -> Optional[dict]:
         n_dense = sum(p.n_dense_triples for p in ex)
         n_padding = sum(p.n_padding for p in ex)
         n_padding_unbinned = sum(p.n_padding_unbinned for p in ex)
+        n_unfiltered = sum(
+            p.n_entries if p.n_unfiltered_entries is None
+            else p.n_unfiltered_entries for p in ex)
         return {
             "n_steps": len(lm.step_executors),
             "n_empty_steps": len(lm.empty_steps),
@@ -114,6 +151,10 @@ def _collect_executor_stats(lm, densify: bool) -> Optional[dict]:
             "n_padding": n_padding,
             "n_padding_unbinned": n_padding_unbinned,
             "padding_triples_saved": n_padding_unbinned - n_padding,
+            # on-the-fly filter accounting (repro.sparsity): triples the
+            # binary masks admitted but the norm-product bound dropped
+            "n_unfiltered_triples": n_unfiltered,
+            "n_norm_filtered_triples": n_unfiltered - n_entries,
         }
     plan = getattr(lm, "executor_plan", None)
     return None if plan is None else plan.stats()
@@ -265,6 +306,10 @@ def distributed_matmul(
     local_kernel: Optional[str] = None,
     a_mask: Optional[np.ndarray] = None,
     b_mask: Optional[np.ndarray] = None,
+    a_norms: Optional[np.ndarray] = None,
+    b_norms: Optional[np.ndarray] = None,
+    filter_eps: Optional[float] = None,
+    stack_bins: Optional[int] = None,
     precision=jax.lax.Precision.DEFAULT,
     pipeline_depth: Optional[int] = None,
     double_buffer: Optional[bool] = None,
@@ -293,6 +338,25 @@ def distributed_matmul(
     densified path ignores them (absent blocks are zeros, the single
     big GEMM is already correct).
 
+    Norm-based on-the-fly filtering (repro.sparsity): with
+    ``filter_eps`` not None, product contributions whose block-norm
+    bound ``norm(A_ik) * norm(B_kj)`` falls below eps are dropped
+    before they reach a multiplication stack.  ``a_norms`` /
+    ``b_norms`` are *global* per-block Frobenius norms (block-grid
+    float arrays); when omitted they are computed on the fly from the
+    payloads (requires concrete arrays — call outside jit, as with
+    ``return_plan``).  Norms ride the same per-shift / per-panel
+    slicing machinery as the masks (``cannon_step_norms`` /
+    ``summa_step_norms`` / ``ts_step_norms``; SPMD union semantics
+    become union-of-max), a step with no retained triple is skipped
+    entirely, and the planner's occupancy becomes the norm-predicted
+    retained fraction.  ``filter_eps=0.0`` is bit-identical to the
+    unfiltered path; the densified local path ignores triple filtering
+    (one big GEMM computes everything — filtering there is only the
+    caller's post-multiply mask, see dbcsr.multiply).  ``stack_bins``
+    caps the stack executor's size-bin count (core/engine.py;
+    DBCSR_STACK_BINS env overrides the default 4).
+
     ``pipeline_depth`` (core/schedule.py): 2 = double-buffered
     comm/compute overlap, 1 = serial (bit-identical output), 0 = rolled
     fori_loop ablation; ``None`` takes the plan's depth under ``auto``
@@ -311,6 +375,15 @@ def distributed_matmul(
     if k != k2:
         raise ValueError(f"inner dims disagree: {a.shape} @ {b.shape}")
 
+    filtering = filter_eps is not None
+    if filtering and a_norms is None and b_norms is None:
+        # on-the-fly: derive the block norms from the payloads (one
+        # blockwise reduction each; masked so absent blocks report 0)
+        from repro.sparsity.norms import block_norms_of
+
+        a_norms = block_norms_of(a, block_m, block_k, a_mask)
+        b_norms = block_norms_of(b, block_k, block_n, b_mask)
+
     plan = None
     if algorithm == "auto" or return_plan:
         from repro.planner.plan import plan_multiply
@@ -319,7 +392,8 @@ def distributed_matmul(
         mesh_shape = ((pr0, pc0) if grid.stack_axis is None
                       else (pr0, pc0, grid.stack_size(mesh)))
         occ = _global_occupancy(m, k, n, block_m, block_k, block_n,
-                                a_mask, b_mask)
+                                a_mask, b_mask, a_norms, b_norms,
+                                filter_eps)
         plan = plan_multiply(
             m, k, n, blocks=(block_m, block_k, block_n),
             mesh_shape=mesh_shape, occupancy=occ,
@@ -399,32 +473,63 @@ def distributed_matmul(
         blocked_kw = dict(
             block_m=block_m, block_k=block_k, block_n=block_n,
             stack_size=stack_size, align=align,
-            kernel=local_kernel or "smm")
-        if a_mask is None and b_mask is None:
+            kernel=local_kernel or "smm", stack_bins=stack_bins)
+        if a_mask is None and b_mask is None and not filtering:
             lm = blocked_local_matmul(ml, kl, nl, **blocked_kw)
         else:
             am, bmk = _block_masks(m, k, n, block_m, block_k, block_n,
                                    a_mask, b_mask)
+            an_g = bn_g = None
+            if filtering:
+                # norms ride the same slicing machinery as the masks;
+                # mask-absent blocks are forced to norm 0 so one >= eps
+                # comparison folds both criteria per rank
+                from repro.sparsity.norms import normalize_block_norms
+
+                an_g, bn_g = normalize_block_norms(
+                    am.shape[0], am.shape[1], bmk.shape[1],
+                    a_norms, b_norms)
+                an_g = np.where(am, an_g, np.float32(0.0))
+                bn_g = np.where(bmk, bn_g, np.float32(0.0))
             if algorithm in ("cannon", "cannon25d"):
                 c_repl = (grid.stack_size(mesh)
                           if algorithm == "cannon25d" else 1)
                 steps = [{"pair_mask": pm}
                          for pm in cannon_step_masks(am, bmk, pg, c_repl)]
+                if filtering:
+                    for s, pn in zip(steps, cannon_step_norms(
+                            an_g, bn_g, pg, c_repl)):
+                        s.update(pair_norms=pn, filter_eps=filter_eps)
                 lm = _stepwise_blocked_lm(ml, kl, nl, mask_steps=steps,
                                           **blocked_kw)
             elif algorithm == "summa" and kw.get("bcast") != "gather":
                 steps = [{"a_mask": ua, "b_mask": ub} for ua, ub in
                          summa_step_masks(am, bmk, pr, pc, n_panels)]
+                if filtering:
+                    for s, (una, unb) in zip(steps, summa_step_norms(
+                            an_g, bn_g, pr, pc, n_panels)):
+                        s.update(a_norms=una, b_norms=unb,
+                                 filter_eps=filter_eps)
                 lm = _stepwise_blocked_lm(ml, kl, nl, mask_steps=steps,
                                           **blocked_kw)
             elif algorithm == "summa":
                 ua, ub = summa_gather_masks(am, bmk, pr, pc)
+                norm_kw = {}
+                if filtering:
+                    una, unb = summa_gather_norms(an_g, bn_g, pr, pc)
+                    norm_kw = dict(a_norms=una, b_norms=unb,
+                                   filter_eps=filter_eps)
                 lm = blocked_local_matmul(ml, kl, nl, a_mask=ua, b_mask=ub,
-                                          **blocked_kw)
+                                          **norm_kw, **blocked_kw)
             else:
+                norm_kw = {}
+                if filtering:
+                    norm_kw = dict(ts_step_norms(algorithm, an_g, bn_g,
+                                                 p_all),
+                                   filter_eps=filter_eps)
                 lm = blocked_local_matmul(
                     ml, kl, nl, **ts_step_masks(algorithm, am, bmk, p_all),
-                    **blocked_kw)
+                    **norm_kw, **blocked_kw)
 
     # ---- data-exchange algorithm (all via the schedule engine) --------
     if algorithm == "cannon":

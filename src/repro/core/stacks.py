@@ -97,6 +97,39 @@ def _pair_presence(
     return am[i] & bm[:, j].T
 
 
+def _norm_keep(
+    nbr: int,
+    nbk: int,
+    nbc: int,
+    i: np.ndarray,
+    j: np.ndarray,
+    a_norms: Optional[np.ndarray],
+    b_norms: Optional[np.ndarray],
+    pair_norms: Optional[np.ndarray],
+    filter_eps: float,
+) -> np.ndarray:
+    """(n_c, nbk) bool: which k-updates clear the norm-product threshold
+    (``norm(A_ik) * norm(B_kj) >= filter_eps`` — the on-the-fly filter;
+    see repro.sparsity).  Rows follow the same Morton traversal as
+    ``_pair_presence``, so the two AND together elementwise.  At eps 0
+    every product (``>= 0``) passes, keeping the filtered enumeration
+    bit-identical to the mask-only one."""
+    eps = float(filter_eps)
+    if pair_norms is not None:
+        if a_norms is not None or b_norms is not None:
+            raise ValueError(
+                "pass either pair_norms or a_norms/b_norms, not both")
+        pair_norms = np.asarray(pair_norms, dtype=np.float32)
+        if pair_norms.shape != (nbr, nbk, nbc):
+            raise ValueError(
+                f"pair_norms shape {pair_norms.shape} != {(nbr, nbk, nbc)}")
+        return pair_norms.astype(np.float64)[i, :, j] >= eps
+    from repro.sparsity.norms import normalize_block_norms
+
+    an, bn = normalize_block_norms(nbr, nbk, nbc, a_norms, b_norms)
+    return (an.astype(np.float64)[i] * bn.astype(np.float64)[:, j].T) >= eps
+
+
 def build_stacks(
     a_layout: BlockLayout,
     b_layout: BlockLayout,
@@ -104,6 +137,10 @@ def build_stacks(
     a_mask: Optional[np.ndarray] = None,
     b_mask: Optional[np.ndarray] = None,
     pair_mask: Optional[np.ndarray] = None,
+    a_norms: Optional[np.ndarray] = None,
+    b_norms: Optional[np.ndarray] = None,
+    pair_norms: Optional[np.ndarray] = None,
+    filter_eps: Optional[float] = None,
 ) -> List[StackPlan]:
     """Generation phase: enumerate the *present* (a, b, c) block triples
     of the local multiply, in cache-oblivious traversal order over the C
@@ -121,6 +158,15 @@ def build_stacks(
     the "~8 million stacks for block size 22" regime the paper measures
     for the 63'360^2 matrices; masked output with all-true masks is
     bit-identical to the dense enumeration.
+
+    Norm filtering — DBCSR's on-the-fly filter (repro.sparsity): with
+    ``filter_eps`` not None and block norms given (``a_norms`` /
+    ``b_norms`` (float, block-grid shapes) or a direct ``pair_norms``
+    ((nbr, nbk, nbc), the distributed layer's per-step union-of-max
+    products), a mask-present triple is additionally dropped when
+    ``norm(A_ik) * norm(B_kj) < filter_eps``.  ``filter_eps=0.0``
+    retains everything — bit-identical to the mask-only enumeration —
+    while ``filter_eps=None`` skips the predicate entirely.
     """
     if a_layout.block_cols != b_layout.block_rows:
         raise ValueError("inner block dims disagree")
@@ -141,6 +187,10 @@ def build_stacks(
     i = c_order[:, 0].astype(np.int64)
     j = c_order[:, 1].astype(np.int64)
     pair = _pair_presence(nbr, nbk, nbc, i, j, a_mask, b_mask, pair_mask)
+    if filter_eps is not None and (a_norms is not None or b_norms is not None
+                                   or pair_norms is not None):
+        pair = pair & _norm_keep(nbr, nbk, nbc, i, j, a_norms, b_norms,
+                                 pair_norms, filter_eps)
     rows, ks = np.nonzero(pair)
     a_idx = i[rows] * nbk + ks
     b_idx = ks * nbc + j[rows]

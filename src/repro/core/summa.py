@@ -44,7 +44,7 @@ from .schedule import Schedule, execute_schedule, resolve_pipeline_depth
 
 __all__ = ["summa_matmul", "summa_n_panels", "build_summa_schedule",
            "build_summa_gather_schedule", "summa_step_masks",
-           "summa_gather_masks"]
+           "summa_gather_masks", "summa_step_norms", "summa_gather_norms"]
 
 
 def summa_n_panels(pr: int, pc: int) -> int:
@@ -141,6 +141,63 @@ def summa_step_masks(
             ub |= bm[ksl, j * lc:(j + 1) * lc]
         out.append((ua, ub))
     return out
+
+
+def summa_step_norms(
+    an: np.ndarray, bn: np.ndarray, pr: int, pc: int, n_panels: int,
+) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Per-panel (a_norms, b_norms) max-unions for psum-broadcast SUMMA
+    — the norm twin of ``summa_step_masks`` (repro.sparsity).
+
+    SPMD union-of-max semantics: the A-side takes the elementwise MAX
+    over the pr row chunks, the B-side over the pc column chunks.  The
+    factored product ``max_i(an) * max_j(bn)`` upper-bounds every
+    rank's norm product, so ``filter_eps`` never drops a triple some
+    rank still needs — the same conservativeness as the factored mask
+    union."""
+    nbr, nbk = an.shape
+    nbc = bn.shape[1]
+    if nbr % pr or nbc % pc or nbk % n_panels:
+        raise ValueError(
+            f"block grid ({nbr},{nbk},{nbc}) not divisible by summa grid "
+            f"{pr}x{pc} with {n_panels} panels")
+    an = np.asarray(an, dtype=np.float32)
+    bn = np.asarray(bn, dtype=np.float32)
+    lr, lc, lkp = nbr // pr, nbc // pc, nbk // n_panels
+    out = []
+    for p in range(n_panels):
+        ksl = slice(p * lkp, (p + 1) * lkp)
+        ua = np.zeros((lr, lkp), dtype=np.float32)
+        for i in range(pr):
+            np.maximum(ua, an[i * lr:(i + 1) * lr, ksl], out=ua)
+        ub = np.zeros((lkp, lc), dtype=np.float32)
+        for j in range(pc):
+            np.maximum(ub, bn[ksl, j * lc:(j + 1) * lc], out=ub)
+        out.append((ua, ub))
+    return out
+
+
+def summa_gather_norms(
+    an: np.ndarray, bn: np.ndarray, pr: int, pc: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Factored max-unions for PUMMA-style (all-gather) SUMMA — the
+    norm twin of ``summa_gather_masks``: one step, A maxed over row
+    chunks, B over column chunks."""
+    nbr, nbk = an.shape
+    nbc = bn.shape[1]
+    if nbr % pr or nbc % pc:
+        raise ValueError(
+            f"block grid ({nbr},{nbc}) not divisible by grid {pr}x{pc}")
+    an = np.asarray(an, dtype=np.float32)
+    bn = np.asarray(bn, dtype=np.float32)
+    lr, lc = nbr // pr, nbc // pc
+    ua = np.zeros((lr, nbk), dtype=np.float32)
+    for i in range(pr):
+        np.maximum(ua, an[i * lr:(i + 1) * lr], out=ua)
+    ub = np.zeros((nbk, lc), dtype=np.float32)
+    for j in range(pc):
+        np.maximum(ub, bn[:, j * lc:(j + 1) * lc], out=ub)
+    return ua, ub
 
 
 def summa_gather_masks(

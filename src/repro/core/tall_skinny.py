@@ -38,7 +38,8 @@ from .cannon import _default_local_matmul
 from .schedule import Schedule, execute_schedule, resolve_pipeline_depth
 
 __all__ = ["tall_skinny_matmul", "build_ts_schedule", "ts_step_masks",
-           "classify_shape", "ts_classify_ratio", "DEFAULT_TS_RATIO"]
+           "ts_step_norms", "classify_shape", "ts_classify_ratio",
+           "DEFAULT_TS_RATIO"]
 
 # The historical hardcoded tall/skinny threshold.  The live threshold
 # is planner-owned (the cost-model crossover where tall-skinny's O(1)
@@ -175,6 +176,46 @@ def ts_step_masks(mode: str, am: np.ndarray, bm: np.ndarray,
     for d in range(p_all):
         ub |= bm[:, d * lc:(d + 1) * lc]
     return {"a_mask": am, "b_mask": ub}
+
+
+def ts_step_norms(mode: str, an: np.ndarray, bn: np.ndarray,
+                  p_all: int) -> dict:
+    """Single-step norm kwargs for the tall-and-skinny variants — the
+    norm twin of ``ts_step_masks`` under SPMD union-of-max semantics
+    (repro.sparsity): where the mask builder unions presence over the
+    ``p_all`` shards, the norm builder takes the elementwise MAX, so
+    ``filter_eps`` never drops a triple some shard still needs."""
+    nbr, nbk = an.shape
+    nbc = bn.shape[1]
+    an = np.asarray(an, dtype=np.float32)
+    bn = np.asarray(bn, dtype=np.float32)
+    if mode == "ts_k":
+        if nbk % p_all:
+            raise ValueError(f"K block grid {nbk} not divisible by {p_all}")
+        lk = nbk // p_all
+        pair = np.zeros((nbr, lk, nbc), dtype=np.float32)
+        for d in range(p_all):
+            ac = an[:, d * lk:(d + 1) * lk]
+            if not ac.any():
+                continue
+            bc = bn[d * lk:(d + 1) * lk, :]
+            np.maximum(pair, ac[:, :, None] * bc[None, :, :], out=pair)
+        return {"pair_norms": pair}
+    if mode == "ts_m":
+        if nbr % p_all:
+            raise ValueError(f"M block grid {nbr} not divisible by {p_all}")
+        lr = nbr // p_all
+        ua = np.zeros((lr, nbk), dtype=np.float32)
+        for d in range(p_all):
+            np.maximum(ua, an[d * lr:(d + 1) * lr], out=ua)
+        return {"a_norms": ua, "b_norms": bn}
+    if nbc % p_all:
+        raise ValueError(f"N block grid {nbc} not divisible by {p_all}")
+    lc = nbc // p_all
+    ub = np.zeros((nbk, lc), dtype=np.float32)
+    for d in range(p_all):
+        np.maximum(ub, bn[:, d * lc:(d + 1) * lc], out=ub)
+    return {"a_norms": an, "b_norms": ub}
 
 
 def tall_skinny_matmul(

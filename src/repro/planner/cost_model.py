@@ -24,14 +24,21 @@ Local-path costs:
   densified   full 2*m*k*n flops at the big-GEMM rate (absent blocks
               are stored zeros, so occupancy does NOT discount flops)
               plus the densify/undensify copy.
-  blocked     only present triples dispatch: flops are discounted by
+  blocked     only RETAINED triples dispatch: flops are discounted by
               the triple occupancy, padded up to whole ``stack_tile``
               scan rows (the executor's real dispatch shape), plus a
-              per-entry scheduling overhead.  Occupancy zero is a
-              contract violation here — the caller (plan.py) must
-              short-circuit an empty mask product to a trivial plan
-              *before* any candidate is costed (this is where the old
-              divide-by-zero lived).
+              per-entry scheduling overhead.  When the operands carry
+              block norms and a ``filter_eps`` (repro.sparsity), the
+              occupancy the caller passes is the NORM-PREDICTED
+              retained-triple fraction (mask-present triples clearing
+              the eps norm-product bound, core/multiply.py
+              ``_global_occupancy``), not the binary mask fill — the
+              on-the-fly filter's savings price into every blocked
+              candidate.  Occupancy zero is a contract violation here —
+              the caller (plan.py) must short-circuit an empty product
+              (mask-empty OR norm-predicted-empty under eps) to a
+              trivial plan *before* any candidate is costed (this is
+              where the old divide-by-zero lived).
 
 Comm/compute overlap (the schedule engine, core/schedule.py): at
 ``pipeline_depth >= 2`` the driver issues step t+1's ppermute / panel
@@ -148,7 +155,8 @@ class Problem:
     block_m: int
     block_k: int
     block_n: int
-    occupancy: float        # present-triple fraction of the dense grid
+    occupancy: float        # retained-triple fraction of the dense grid
+                            # (norm-predicted under a filter_eps)
     itemsize: int           # operand dtype bytes
     pr: int
     pc: int

@@ -16,10 +16,14 @@ result in an LRU cache keyed on the full problem signature — a second
 identical call performs ZERO cost-model evaluations (asserted by
 tests/test_planner.py via ``cost_model.N_EVALS``).
 
-An empty mask product short-circuits to a trivial zero-cost plan
-*before* any candidate is costed: the blocked-path model divides by
+An empty product short-circuits to a trivial zero-cost plan *before*
+any candidate is costed: the blocked-path model divides by
 occupancy-derived quantities and must never see occupancy zero (the
-``_masks_empty`` contract shared with core/multiply.py).
+``_masks_empty`` contract shared with core/multiply.py).  This fires
+both for an empty binary-mask product AND for a norm-predicted-empty
+product — eps filtering (repro.sparsity) can empty a product whose
+binary masks are non-empty, in which case ``_global_occupancy``
+reports 0.0 and the trivial (all-steps-skipped) plan executes.
 """
 from __future__ import annotations
 
@@ -117,11 +121,12 @@ def _normalize_mesh_shape(mesh_shape) -> Tuple[int, int, int]:
 
 def _trivial_plan(prob: Problem, algorithm: Optional[str],
                   densify: Optional[bool]) -> MultiplyPlan:
-    """Empty mask product: nothing will be multiplied, so return a
-    zero-cost plan without costing any candidate (the blocked model
-    would divide by zero occupancy).  The blocked path is preferred —
-    its all-empty step plans skip every dispatch — falling back to
-    whatever geometry the mesh admits."""
+    """Empty product (mask-empty, or norm-predicted-empty under a
+    filter_eps): nothing will be multiplied, so return a zero-cost plan
+    without costing any candidate (the blocked model would divide by
+    zero occupancy).  The blocked path is preferred — its all-empty
+    step plans skip every dispatch — falling back to whatever geometry
+    the mesh admits."""
     if algorithm is not None:
         order = [(algorithm, densify if densify is not None else False),
                  (algorithm, True)]

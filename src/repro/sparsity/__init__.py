@@ -1,0 +1,45 @@
+"""Norm-based on-the-fly filtering — DBCSR's block-sparse heart.
+
+The real DBCSR is a *block-sparse* engine: every block carries a
+Frobenius norm, and product contributions with
+``norm(A_ik) * norm(B_kj) < eps`` are dropped before they ever reach a
+multiplication stack.  This is what makes linear-scaling
+electronic-structure workloads (density-matrix purification in CP2K)
+feasible — the sparse regime the 2.5D companion paper (Lazzaro et al.,
+arXiv:1705.10218) and the tensor follow-up (Sivkov et al.,
+arXiv:1910.13555) optimize for.
+
+    norms.py      per-block Frobenius norms (one vmap reduction per
+                  block geometry) + the product norm bound
+                  ``||C_ij|| <= sum_k ||A_ik|| * ||B_kj||``
+    filter.py     ``filter_eps`` predicates shared by every layer:
+                  retained-triple counting, the retained C support
+                  (product mask), per-step emptiness under eps
+    workloads.py  sparsity-evolving workloads (McWeeny purification)
+
+The eps contract (shared with core/stacks.py, core/engine.py,
+core/multiply.py, core/dbcsr.py): a triple (i, k, j) is RETAINED iff
+``norm(A_ik) * norm(B_kj) >= eps`` (dropped when the product bound is
+strictly below eps), so ``filter_eps=0.0`` retains everything and is
+bit-identical to the mask-only path; ``filter_eps=None`` disables the
+norm machinery entirely.
+"""
+from .norms import (block_norms_of, compute_block_norms,
+                    normalize_block_norms, product_norm_bound)
+from .filter import (count_retained_triples, norm_filter_stats,
+                     product_mask, retained_pair_presence)
+from .workloads import banded_hamiltonian, initial_density, mcweeny_purify
+
+__all__ = [
+    "block_norms_of",
+    "compute_block_norms",
+    "normalize_block_norms",
+    "product_norm_bound",
+    "count_retained_triples",
+    "norm_filter_stats",
+    "product_mask",
+    "retained_pair_presence",
+    "banded_hamiltonian",
+    "initial_density",
+    "mcweeny_purify",
+]

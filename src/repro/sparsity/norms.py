@@ -1,0 +1,123 @@
+"""Per-block Frobenius norms of a padded dense DBCSR payload.
+
+DBCSR keeps a norm per block so the multiply can drop contributions
+whose norm-product bound falls below ``filter_eps`` *before* they reach
+a multiplication stack (on-the-fly filtering).  Our payloads are padded
+dense arrays with absent blocks stored as zeros (core/dbcsr.py), so the
+norms of a whole matrix are one blockwise reduction:
+
+  * the reduction is built (and jit-traced) ONCE per block geometry —
+    a vmapped per-block sum-of-squares over the ``to_blocks`` layout —
+    and reused across every matrix and every call with that geometry
+    (shapes retrace inside the jit cache, the Python closure does not
+    rebuild),
+  * the result is pulled to HOST numpy: norms are static planning
+    metadata exactly like the occupancy masks — filtering decisions
+    happen at stack-generation time, never inside a traced program.
+
+``DBCSRMatrix`` caches the result as ``block_norms`` and threads it
+through pytree flatten/unflatten aux data (same mechanism as
+``block_mask``) so norms survive jit round-trips.
+
+Note on the accumulation dtype: norms accumulate in float32 regardless
+of payload dtype — they gate an *approximation* (eps-filtering), so
+float32 magnitudes are plenty, and a fixed dtype keeps the engine's
+content-fingerprint memoization stable across payload dtypes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["compute_block_norms", "block_norms_of",
+           "normalize_block_norms", "product_norm_bound"]
+
+
+@functools.lru_cache(maxsize=None)
+def _norm_reduction(block_m: int, block_n: int):
+    """The blockwise Frobenius reduction for one block geometry: built
+    once, jitted once (per payload shape, via jax's own trace cache)."""
+
+    def per_block(blk):
+        b32 = blk.astype(jnp.float32)
+        return jnp.sqrt(jnp.sum(b32 * b32))
+
+    @jax.jit
+    def reduce(x):
+        r, c = x.shape
+        nbr, nbc = r // block_m, c // block_n
+        blocks = (x.reshape(nbr, block_m, nbc, block_n)
+                  .transpose(0, 2, 1, 3)
+                  .reshape(nbr * nbc, block_m, block_n))
+        return jax.vmap(per_block)(blocks).reshape(nbr, nbc)
+
+    return reduce
+
+
+def compute_block_norms(x, block_m: int, block_n: int) -> np.ndarray:
+    """(rows, cols) payload -> (nbr, nbc) float32 numpy of per-block
+    Frobenius norms.  Works on sharded global arrays (the reduction is
+    an ordinary jitted program; GSPMD partitions it) and host arrays
+    alike; the result always lands on host because it parameterises
+    host-side stack generation.
+    """
+    r, c = x.shape
+    if r % block_m or c % block_n:
+        raise ValueError(
+            f"shape {x.shape} not divisible by block ({block_m},{block_n})")
+    out = _norm_reduction(block_m, block_n)(jnp.asarray(x))
+    return np.asarray(jax.device_get(out), dtype=np.float32)
+
+
+def block_norms_of(x, block_m: int, block_n: int,
+                   block_mask: Optional[np.ndarray] = None) -> np.ndarray:
+    """``compute_block_norms`` with the occupancy mask applied: absent
+    blocks report norm 0 even if the payload carries stray nonzeros
+    (it should not — absent blocks are stored as zeros — but norms must
+    never resurrect a block the mask declares absent)."""
+    norms = compute_block_norms(x, block_m, block_n)
+    if block_mask is not None:
+        norms = np.where(np.asarray(block_mask, dtype=bool), norms,
+                         np.float32(0.0)).astype(np.float32)
+    return norms
+
+
+def normalize_block_norms(
+    nbr: int,
+    nbk: int,
+    nbc: int,
+    a_norms: Optional[np.ndarray] = None,
+    b_norms: Optional[np.ndarray] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Canonical norm normalization, mirroring
+    ``stacks.normalize_block_masks``: ``None`` means unit-norm blocks
+    (the filter then degrades to thresholding the known side alone),
+    anything else must be a float-coercible array of exactly the block
+    grid shape."""
+    an = (np.ones((nbr, nbk), dtype=np.float32) if a_norms is None
+          else np.asarray(a_norms, dtype=np.float32))
+    bn = (np.ones((nbk, nbc), dtype=np.float32) if b_norms is None
+          else np.asarray(b_norms, dtype=np.float32))
+    if an.shape != (nbr, nbk):
+        raise ValueError(
+            f"a_norms shape {an.shape} != block grid {(nbr, nbk)}")
+    if bn.shape != (nbk, nbc):
+        raise ValueError(
+            f"b_norms shape {bn.shape} != block grid {(nbk, nbc)}")
+    return an, bn
+
+
+def product_norm_bound(a_norms: np.ndarray,
+                       b_norms: np.ndarray) -> np.ndarray:
+    """(nbr, nbc) upper bound on the product's block norms:
+    ``||C_ij||_F <= sum_k ||A_ik||_F * ||B_kj||_F`` (submultiplicativity
+    + triangle inequality).  This is what makes the post-multiply mask
+    predictable *before* executing: any C block whose bound is below
+    eps is guaranteed filtered."""
+    an = np.asarray(a_norms, dtype=np.float64)
+    bn = np.asarray(b_norms, dtype=np.float64)
+    return an @ bn
