@@ -21,6 +21,8 @@ BENCHES = [
     ("multiply planner regret (auto vs fixed)", "benchmarks.bench_planner"),
     ("schedule-engine pipeline depth (comm/compute overlap)",
      "benchmarks.bench_overlap"),
+    ("batched multiply service (fused vs looped dispatch)",
+     "benchmarks.bench_batched"),
     ("IV-C DBCSR vs PDGEMM(SUMMA)", "benchmarks.bench_vs_pgemm"),
     ("2.5D Cannon (pod-axis, beyond-paper)", "benchmarks.bench_25d"),
     ("roofline summary (from dry-run artifacts)", "benchmarks.bench_roofline"),

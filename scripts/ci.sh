@@ -39,3 +39,9 @@ python benchmarks/bench_planner.py --smoke --check
 # the jitter floor, and the measured per-algorithm overlap constants
 # feed the planner calibration (artifacts/bench/overlap_smoke.json)
 python benchmarks/bench_overlap.py --smoke --check
+
+# batched multiply service: fused one-dispatch batches vs the looped
+# per-request baseline (artifacts/bench/batched_smoke.json) — --check
+# fails the build unless the fused path clears 2x looped requests/s on
+# >= 16 small same-geometry requests (results cross-checked bitwise)
+python benchmarks/bench_batched.py --smoke --check

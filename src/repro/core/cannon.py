@@ -271,7 +271,10 @@ def cannon_matmul(
         return execute_schedule(sched, a_blk, b_blk, local_matmul=lm,
                                 out_dtype=out_dtype, pipeline_depth=depth)
 
-    spec = P(grid.row_axis, grid.col_axis)
+    # leading batch dims (a fused product batch (G, m, k)) replicate;
+    # the ppermute skew/shift callables are shape-agnostic, so the same
+    # schedule drives single products and batches alike
+    spec = P(*([None] * (a.ndim - 2)), grid.row_axis, grid.col_axis)
     fn = shard_map(body, mesh=mesh, in_specs=(spec, spec),
                    out_specs=spec, check_vma=False)
     return fn(a, b)

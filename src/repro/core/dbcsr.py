@@ -25,8 +25,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .blocking import BlockLayout, GridSpec
 
-__all__ = ["DBCSRMatrix", "create", "multiply", "multiply_vector",
-           "add", "trace", "transpose"]
+__all__ = ["DBCSRMatrix", "create", "multiply", "multiply_batched",
+           "multiply_vector", "add", "trace", "transpose"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -182,7 +182,8 @@ def create(
     return out
 
 
-def add(a: DBCSRMatrix, b: DBCSRMatrix) -> DBCSRMatrix:
+def add(a: DBCSRMatrix, b: DBCSRMatrix,
+        recompute_norms: bool = False) -> DBCSRMatrix:
     """C = A + B.  Result occupancy is the union of the operands'.
 
     A missing mask means *dense* (every block present), so when exactly
@@ -193,13 +194,21 @@ def add(a: DBCSRMatrix, b: DBCSRMatrix) -> DBCSRMatrix:
 
     Norms are NOT propagated: ``||A + B||_F`` per block is not
     derivable from the operands' norms (only bounded), and the cache
-    must never hold a bound where ``filter()`` expects the truth — the
-    result recomputes lazily via ``norms()``.
+    must never hold a bound where ``filter()`` expects the truth — so
+    by default the result's norm cache is empty and recomputes lazily
+    via ``norms()``.  ``recompute_norms=True`` is a convenience that
+    eagerly computes the sum's true norms from its payload before
+    returning (one blockwise reduction — exactly what the first
+    ``norms()`` call would do; handy when the caller filters or
+    eps-multiplies the sum immediately, e.g. purification iterations).
     """
     mask = None
     if a.block_mask is not None and b.block_mask is not None:
         mask = a.block_mask | b.block_mask
-    return DBCSRMatrix(a.data + b.data, a.layout, a.grid, mask)
+    out = DBCSRMatrix(a.data + b.data, a.layout, a.grid, mask)
+    if recompute_norms:
+        out.norms()
+    return out
 
 
 def trace(a: DBCSRMatrix) -> jax.Array:
@@ -217,6 +226,42 @@ def multiply_vector(a: DBCSRMatrix, x: jax.Array) -> jax.Array:
     replicated vector; GSPMD reduces the row partials (the degenerate
     N=1 tall-skinny case)."""
     return a.data @ x
+
+
+def _product_mask(a: DBCSRMatrix, b: DBCSRMatrix, an, bn,
+                  filter_eps: Optional[float]):
+    """The result support of C = A @ B, shared by ``multiply`` and
+    ``multiply_batched``: ``(mask, needs_zeroing)`` where ``mask`` is
+    the symbolic product support ``(a_mask @ b_mask) > 0`` (None when
+    both operands are dense and no filter applies) or, under
+    ``filter_eps``, the eps-*retained* support — in which case the
+    payload outside it must be zeroed (``needs_zeroing``) to keep the
+    mask/zeros invariant on both local paths."""
+    if (a.block_mask is None and b.block_mask is None
+            and filter_eps is None):
+        return None, False
+    from .stacks import normalize_block_masks
+
+    am, bm = normalize_block_masks(
+        a.layout.nblock_rows, a.layout.nblock_cols,
+        b.layout.nblock_cols, a.block_mask, b.block_mask)
+    if filter_eps is not None:
+        from repro.sparsity.filter import product_mask
+
+        return product_mask(am, bm, an, bn, filter_eps), True
+    return (am.astype(np.int64) @ bm.astype(np.int64)) > 0, False
+
+
+def _apply_result_mask(c_data: jax.Array, mask: Optional[np.ndarray],
+                       needs_zeroing: bool, block_rows: int,
+                       block_cols: int) -> jax.Array:
+    """Zero the payload outside the retained support (eps path only —
+    the symbolic-product mask never needs it, absent blocks are already
+    exact zeros)."""
+    if mask is None or not needs_zeroing:
+        return c_data
+    full = np.repeat(np.repeat(mask, block_rows, 0), block_cols, 1)
+    return c_data * jnp.asarray(full, dtype=c_data.dtype)
 
 
 def multiply(
@@ -272,6 +317,13 @@ def multiply(
     attribute — it does not survive pytree flatten/jit round-trips
     (only ``data``/``layout``/``grid``/``block_mask``/``block_norms``
     do).
+
+    Many small products?  See ``multiply_batched``: it fuses
+    same-geometry requests into one dispatch, amortizing the per-call
+    trace/launch cost that dominates small multiplies.  Batching and
+    filtering compose — a fused bucket is (geometry, occupancy-bin,
+    eps)-uniform by construction, so ``filter_eps`` semantics inside a
+    batch are identical to this single-product path.
     """
     from .multiply import distributed_matmul
 
@@ -289,28 +341,202 @@ def multiply(
     )
     c_layout = BlockLayout(a.layout.rows, b.layout.cols,
                            a.layout.block_rows, b.layout.block_cols)
-    mask = None
-    if (a.block_mask is not None or b.block_mask is not None
-            or filter_eps is not None):
-        from .stacks import normalize_block_masks
-
-        am, bm = normalize_block_masks(
-            a.layout.nblock_rows, a.layout.nblock_cols,
-            b.layout.nblock_cols, a.block_mask, b.block_mask)
-        if filter_eps is not None:
-            from repro.sparsity.filter import product_mask
-
-            mask = product_mask(am, bm, an, bn, filter_eps)
-            # enforce the mask/zeros invariant — load-bearing on BOTH
-            # local paths: the densified GEMM computes sub-eps blocks
-            # the retained mask excludes, and the blocked path's SPMD
-            # union-of-max steps let a rank deposit small contributions
-            # into blocks outside the global retained support
-            full = np.repeat(np.repeat(mask, a.layout.block_rows, 0),
-                             b.layout.block_cols, 1)
-            c_data = c_data * jnp.asarray(full, dtype=c_data.dtype)
-        else:
-            mask = (am.astype(np.int64) @ bm.astype(np.int64)) > 0
+    # the eps path zeroes the payload outside the retained support —
+    # load-bearing on BOTH local paths: the densified GEMM computes
+    # sub-eps blocks the retained mask excludes, and the blocked path's
+    # SPMD union-of-max steps let a rank deposit small contributions
+    # into blocks outside the global retained support
+    mask, zero = _product_mask(a, b, an, bn, filter_eps)
+    c_data = _apply_result_mask(c_data, mask, zero, a.layout.block_rows,
+                                b.layout.block_cols)
     c = DBCSRMatrix(c_data, c_layout, a.grid, mask)
     c.last_plan = plan
     return (c, plan) if return_plan else c
+
+
+def _bucket_key(a: DBCSRMatrix, b: DBCSRMatrix,
+                filter_eps: Optional[float]) -> tuple:
+    """The batching bucket contract: requests fuse only when they agree
+    on (geometry, occupancy-bin, eps).
+
+      geometry       operand shapes + block sizes + grid axis names —
+                     everything the traced dispatch program's shape
+                     depends on
+      occupancy-bin  ``fill_bin`` of each operand's block-mask fill
+                     (the autotune table's log-spaced bins): requests in
+                     one bin share stack params and pad little against
+                     each other; finer distinctions stay per-request
+                     via the content-fingerprinted plan memo
+      eps            the norm-filter threshold — it shapes the
+                     per-group plans, so it must be bucket-uniform
+
+    This is the same key contract the serving layer
+    (repro.serve.multiply_service) buckets queued requests by.
+    """
+    from repro.kernels.smm.autotune import fill_bin
+
+    return (
+        tuple(a.shape), tuple(b.shape),
+        a.layout.block_rows, a.layout.block_cols, b.layout.block_cols,
+        a.grid.row_axis, a.grid.col_axis,
+        fill_bin(a.occupancy), fill_bin(b.occupancy),
+        None if filter_eps is None else float(filter_eps),
+    )
+
+
+def _execute_bucket(group, *, mesh, algorithm, densify, filter_eps,
+                    fused, **kw):
+    """Run one bucket of same-key requests: fused (one batched
+    dispatch) or looped (per-request ``multiply``), per the planner's
+    fuse-or-loop pricing unless ``fused`` pins it."""
+    from .multiply_batched import BATCHED_ALGORITHMS
+
+    a0, b0 = group[0]
+    g = len(group)
+    an = bn = None
+    if filter_eps is not None:
+        an = [a.norms() for a, _ in group]
+        bn = [b.norms() for _, b in group]
+
+    batchable = (algorithm in ("auto",) + BATCHED_ALGORITHMS
+                 and kw.get("bcast") != "gather")
+    if fused and not batchable:
+        raise ValueError(
+            f"fused=True requires a batch-capable algorithm "
+            f"{BATCHED_ALGORITHMS}, got {algorithm!r}"
+            + (" with bcast='gather'" if kw.get("bcast") == "gather"
+               else ""))
+    plan = None
+    fuse = fused
+    if fuse is None:
+        fuse = batchable and g > 1
+        if fuse:
+            from repro.planner.plan import plan_multiply_batched
+
+            from .multiply import _global_occupancy
+
+            pr, pc = a0.grid.grid_shape(mesh)
+            occs = [
+                _global_occupancy(
+                    a.layout.rows, a.layout.cols, b.layout.cols,
+                    a.layout.block_rows, a.layout.block_cols,
+                    b.layout.block_cols, a.block_mask, b.block_mask,
+                    an[i] if an else None, bn[i] if bn else None,
+                    filter_eps)
+                for i, (a, b) in enumerate(group)
+            ]
+            occ = sum(occs) / len(occs)
+            occ_max = max(occs)
+            plan = plan_multiply_batched(
+                g, a0.layout.rows, a0.layout.cols, b0.layout.cols,
+                blocks=(a0.layout.block_rows, a0.layout.block_cols,
+                        b0.layout.block_cols),
+                mesh_shape=(pr, pc), occupancy=occ,
+                dtype=a0.data.dtype,
+                algorithm=None if algorithm == "auto" else algorithm,
+                densify=densify,
+                padding_frac=(1.0 - occ / occ_max if occ_max > 0 else 0.0))
+            fuse = plan.fuse
+
+    if not fuse:
+        out = [multiply(a, b, mesh=mesh, algorithm=algorithm,
+                        densify=densify, filter_eps=filter_eps, **kw)
+               for a, b in group]
+        return out, {"fused": False, "plan": plan}
+
+    from .multiply_batched import distributed_matmul_batched
+
+    a_masks = [a.block_mask for a, _ in group]
+    b_masks = [b.block_mask for _, b in group]
+    if all(x is None for x in a_masks):
+        a_masks = None
+    if all(x is None for x in b_masks):
+        b_masks = None
+    c_data, bplan = distributed_matmul_batched(
+        jnp.stack([a.data for a, _ in group]),
+        jnp.stack([b.data for _, b in group]),
+        mesh=mesh, grid=a0.grid, algorithm=algorithm, densify=densify,
+        block_m=a0.layout.block_rows, block_k=a0.layout.block_cols,
+        block_n=b0.layout.block_cols,
+        a_masks=a_masks, b_masks=b_masks, a_norms=an, b_norms=bn,
+        filter_eps=filter_eps, return_plan=True, **kw)
+    c_layout = BlockLayout(a0.layout.rows, b0.layout.cols,
+                           a0.layout.block_rows, b0.layout.block_cols)
+    out = []
+    for gi, (a, b) in enumerate(group):
+        mask, zero = _product_mask(
+            a, b, an[gi] if an else None, bn[gi] if bn else None,
+            filter_eps)
+        cd = _apply_result_mask(c_data[gi], mask, zero,
+                                a.layout.block_rows, b.layout.block_cols)
+        c = DBCSRMatrix(cd, c_layout, a.grid, mask)
+        c.last_plan = bplan
+        out.append(c)
+    return out, {"fused": True, "plan": bplan}
+
+
+def multiply_batched(
+    requests,
+    *,
+    mesh: Mesh,
+    algorithm: str = "auto",
+    densify: Optional[bool] = None,
+    filter_eps: Optional[float] = None,
+    fused: Optional[bool] = None,
+    return_plan: bool = False,
+    **kw,
+):
+    """Many products, one dispatch: ``requests`` is a sequence of
+    ``(A, B)`` DBCSRMatrix pairs; returns their products in input
+    order.
+
+    Requests are bucketed by the ``(geometry, occupancy-bin, eps)``
+    key (see ``_bucket_key``) and each bucket executes either FUSED —
+    operands stacked ``(G, m, k)``, ONE schedule / ONE fused stack
+    dispatch for the whole bucket
+    (core/multiply_batched.distributed_matmul_batched) — or LOOPED
+    (per-request ``multiply``), whichever the planner prices cheaper
+    (``plan_multiply_batched``: amortized trace/launch/latency vs
+    cross-request padding waste).  ``fused=True``/``False`` pins the
+    choice; ``None`` (default) lets the planner decide per bucket.
+
+    Semantics match per-request ``multiply`` exactly: per-request
+    product masks, eps-retained support and payload zeroing, and each
+    result carries its bucket's executed ``BatchedMultiplyPlan`` as
+    ``last_plan``.  At ``pipeline_depth=1`` with ``filter_eps`` in
+    {None, 0.0} the fused blocked path is bit-identical to the looped
+    one (core/multiply_batched bit-identity contract).
+
+    ``return_plan=True`` returns ``(results, report)`` where the
+    report carries per-bucket fusion stats: request count, the
+    fuse-or-loop decision, and the executed plan (padding fractions,
+    cross-request plan sharing, predicted fused-vs-looped times).
+    """
+    requests = list(requests)
+    if not requests:
+        return ([], {"n_requests": 0, "n_buckets": 0, "buckets": []}) \
+            if return_plan else []
+    buckets: dict = {}
+    for i, (a, b) in enumerate(requests):
+        buckets.setdefault(_bucket_key(a, b, filter_eps), []).append(i)
+    results: list = [None] * len(requests)
+    bucket_reports = []
+    for key, idxs in buckets.items():
+        out, rep = _execute_bucket(
+            [requests[i] for i in idxs], mesh=mesh, algorithm=algorithm,
+            densify=densify, filter_eps=filter_eps, fused=fused, **kw)
+        for i, c in zip(idxs, out):
+            results[i] = c
+        bucket_reports.append({
+            "key": key, "n_requests": len(idxs), "request_indices": idxs,
+            **rep})
+    if not return_plan:
+        return results
+    report = {
+        "n_requests": len(requests),
+        "n_buckets": len(buckets),
+        "n_fused_requests": sum(r["n_requests"] for r in bucket_reports
+                                if r["fused"]),
+        "buckets": bucket_reports,
+    }
+    return results, report

@@ -33,10 +33,13 @@ import jax.numpy as jnp
 __all__ = [
     "to_blocks",
     "from_blocks",
+    "to_blocks_batched",
+    "from_blocks_batched",
     "densify",
     "undensify",
     "blocked_local_matmul",
     "densified_local_matmul",
+    "grouped_densified_local_matmul",
 ]
 
 
@@ -59,6 +62,30 @@ def from_blocks(blocks: jax.Array, nbr: int, nbc: int) -> jax.Array:
     _, bm, bn = blocks.shape
     return (
         blocks.reshape(nbr, nbc, bm, bn).transpose(0, 2, 1, 3).reshape(nbr * bm, nbc * bn)
+    )
+
+
+def to_blocks_batched(x: jax.Array, bm: int, bn: int) -> jax.Array:
+    """(G, R, C) -> (G, nbr*nbc, bm, bn): ``to_blocks`` over a leading
+    product/group dimension (the fused batched multiply's payload)."""
+    g, r, c = x.shape
+    if r % bm or c % bn:
+        raise ValueError(f"shape {x.shape} not divisible by block ({bm},{bn})")
+    nbr, nbc = r // bm, c // bn
+    return (
+        x.reshape(g, nbr, bm, nbc, bn)
+        .transpose(0, 1, 3, 2, 4)
+        .reshape(g, nbr * nbc, bm, bn)
+    )
+
+
+def from_blocks_batched(blocks: jax.Array, nbr: int, nbc: int) -> jax.Array:
+    """Inverse of to_blocks_batched."""
+    g, _, bm, bn = blocks.shape
+    return (
+        blocks.reshape(g, nbr, nbc, bm, bn)
+        .transpose(0, 1, 3, 2, 4)
+        .reshape(g, nbr * bm, nbc * bn)
     )
 
 
@@ -94,6 +121,31 @@ def densified_local_matmul(precision=jax.lax.Precision.DEFAULT,
     def f(a, b):
         return jax.lax.dot(a, b, precision=precision,
                            preferred_element_type=jnp.float32)
+
+    return f
+
+
+def grouped_densified_local_matmul(precision=jax.lax.Precision.DEFAULT,
+                                   kernel: Optional[str] = None):
+    """Local multiply for the densified path of a fused product batch:
+    one grouped GEMM over ``(G, ml, kl) @ (G, kl, nl)``.
+
+    kernel=None     -> batched jax.lax.dot_general (XLA's MXU path)
+    kernel='pallas' -> kernels/grouped_gemm (one Pallas dispatch for
+                       all G products — the grouped-GEMM unification)
+    """
+    if kernel == "pallas":
+        from repro.kernels.grouped_gemm.ops import grouped_gemm
+
+        def f(a, b):
+            return grouped_gemm(a, b)
+
+        return f
+
+    def f(a, b):
+        return jax.lax.dot_general(
+            a, b, (((a.ndim - 1,), (1,)), ((0,), (0,))),
+            precision=precision, preferred_element_type=jnp.float32)
 
     return f
 

@@ -72,8 +72,12 @@ from .densify import from_blocks, to_blocks
 from .stacks import StackPlan, build_stacks, pad_plans, STACK_SIZE
 
 __all__ = [
+    "BatchedExecutorPlan",
     "ExecutorPlan",
+    "batched_stack_executor",
+    "build_batched_executor_plan",
     "build_executor_plan",
+    "execute_batched_plan",
     "execute_plan",
     "execute_plans_looped",
     "resolve_stack_bins",
@@ -503,6 +507,307 @@ def execute_plans_looped(
         c = process(a_blocks, b_blocks, c, jnp.asarray(p.triples),
                     align=align)
     return c
+
+
+# ---------------------------------------------------------------------------
+# Product-batched execution: N same-geometry products, one dispatch
+# ---------------------------------------------------------------------------
+
+
+def _next_pow2(x: int) -> int:
+    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedExecutorPlan:
+    """``ExecutorPlan``'s batched variant: one fused stack tensor for a
+    *group* of N same-block-geometry products.
+
+    Per-group plans are built through the ordinary memoized
+    ``build_executor_plan`` (so two requests with identical mask/norm
+    content share ONE cached plan — that is the cross-request plan
+    sharing ``n_shared_plans`` counts), then their single-tensor views
+    are padded to a shared ``(n_groups, stack_pad, tile_pad)`` shape and
+    fused by folding the group index into the block indices: group
+    ``g``'s rows are offset by ``(g*n_a_blocks, g*n_b_blocks,
+    g*n_c_blocks)`` and EVERY padding row — a group's own stack padding
+    and the cross-group shape padding alike — points at the single
+    global scratch block ``n_groups * n_c_blocks`` with ``valid=0``.
+
+    ``stack_pad`` / ``tile_pad`` are rounded up to powers of two, so the
+    fused tensor's shape — the only thing the traced dispatch program
+    depends on — is quantized: batches whose per-group occupancies land
+    in the same power-of-two bin (and whose eps bucket matches, since
+    eps shapes the per-group plans) replay one trace.  This is the
+    batched memo-key contract: (geometry, occupancy-bin, eps-bin),
+    shared across requests, while per-group triple *values* still come
+    from the content-fingerprint memo.
+    """
+
+    triples: np.ndarray            # (n_groups*stack_pad, tile_pad, 4) fused
+    n_groups: int
+    n_a_blocks: int                # per-group block counts
+    n_b_blocks: int
+    n_c_blocks: int
+    block_m: int
+    block_k: int
+    block_n: int
+    group_plans: Tuple[ExecutorPlan, ...]
+    n_shared_plans: int            # groups that hit another group's memo entry
+    filter_eps: Optional[float] = None
+
+    @property
+    def scratch_index(self) -> int:
+        return self.n_groups * self.n_c_blocks
+
+    @property
+    def n_stacks(self) -> int:
+        return int(self.triples.shape[0])
+
+    @property
+    def stack_tile(self) -> int:
+        return int(self.triples.shape[1])
+
+    @property
+    def n_entries(self) -> int:
+        return sum(p.n_entries for p in self.group_plans)
+
+    @property
+    def n_padding(self) -> int:
+        """Padding rows of the fused dispatch — per-group stack padding
+        PLUS the cross-group power-of-two shape padding."""
+        return self.n_stacks * self.stack_tile - self.n_entries
+
+    @property
+    def padding_frac(self) -> float:
+        total = self.n_stacks * self.stack_tile
+        return self.n_padding / total if total else 0.0
+
+    def stats(self) -> dict:
+        """Per-group padding and cross-request fusion accounting."""
+        flop_per_entry = 2 * self.block_m * self.block_k * self.block_n
+        per_group = []
+        for p in self.group_plans:
+            per_group.append({
+                "n_entries": p.n_entries,
+                "n_stacks": p.n_stacks,
+                "occupancy": p.occupancy,
+            })
+        return {
+            "n_groups": self.n_groups,
+            "n_shared_plans": self.n_shared_plans,
+            "n_entries": self.n_entries,
+            "n_stacks": self.n_stacks,
+            "stack_tile": self.stack_tile,
+            "n_padding": self.n_padding,
+            "padding_frac": self.padding_frac,
+            "padding_flops": self.n_padding * flop_per_entry,
+            "filter_eps": self.filter_eps,
+            "per_group": per_group,
+        }
+
+
+def build_batched_executor_plan(
+    m: int,
+    k: int,
+    n: int,
+    block_m: int,
+    block_k: int,
+    block_n: int,
+    group_masks,
+    stack_size: int = STACK_SIZE,
+    filter_eps: Optional[float] = None,
+) -> BatchedExecutorPlan:
+    """Fuse one ``ExecutorPlan`` per group into a single group-offset
+    stack tensor (see ``BatchedExecutorPlan``).
+
+    ``group_masks`` is a sequence of per-group mask/norm kwargs dicts
+    (``a_mask`` / ``b_mask`` / ``pair_mask`` / ``a_norms`` / ``b_norms``
+    / ``pair_norms``; an empty dict means a dense group).  Per-group
+    plans are built with ``stack_bins=1`` — within a batch the shape
+    binning happens ACROSS groups (the power-of-two padded fused shape),
+    not within one group's stack list.
+    """
+    group_masks = list(group_masks)
+    if not group_masks:
+        raise ValueError("batched plan needs at least one group")
+    plans = [
+        build_executor_plan(m, k, n, block_m, block_k, block_n, stack_size,
+                            filter_eps=filter_eps, stack_bins=1, **gm)
+        for gm in group_masks
+    ]
+    g_total = len(plans)
+    base = plans[0]
+    n_a = base.nbr * base.nbk
+    n_b = base.nbk * base.nbc
+    n_c = base.n_c_blocks
+    seen, shared = set(), 0
+    for p in plans:
+        if id(p) in seen:
+            shared += 1
+        else:
+            seen.add(id(p))
+    views = [p.triples for p in plans]
+    s_max = max(v.shape[0] for v in views)
+    t_max = max(v.shape[1] for v in views)
+    if s_max == 0:
+        fused = np.zeros((0, 1, 4), dtype=np.int32)
+    else:
+        s_pad, t_pad = _next_pow2(s_max), _next_pow2(t_max)
+        scratch = g_total * n_c
+        fused = np.zeros((g_total, s_pad, t_pad, 4), dtype=np.int32)
+        fused[..., 2] = scratch
+        for g, v in enumerate(views):
+            s, t = int(v.shape[0]), int(v.shape[1])
+            if not s:
+                continue
+            valid = v[:, :, 3] != 0
+            sub = fused[g, :s, :t]
+            sub[:, :, 0] = np.where(valid, v[:, :, 0] + g * n_a, 0)
+            sub[:, :, 1] = np.where(valid, v[:, :, 1] + g * n_b, 0)
+            sub[:, :, 2] = np.where(valid, v[:, :, 2] + g * n_c, scratch)
+            sub[:, :, 3] = v[:, :, 3]
+        fused = fused.reshape(g_total * s_pad, t_pad, 4)
+    fused.setflags(write=False)
+    return BatchedExecutorPlan(
+        triples=fused,
+        n_groups=g_total,
+        n_a_blocks=n_a,
+        n_b_blocks=n_b,
+        n_c_blocks=n_c,
+        block_m=block_m,
+        block_k=block_k,
+        block_n=block_n,
+        group_plans=tuple(plans),
+        n_shared_plans=shared,
+        filter_eps=filter_eps,
+    )
+
+
+def execute_batched_plan(
+    plan: BatchedExecutorPlan,
+    a_blocks: jax.Array,   # (n_groups, n_a_blocks, bm, bk)
+    b_blocks: jax.Array,   # (n_groups, n_b_blocks, bk, bn)
+    c_blocks: jax.Array,   # (n_groups, n_c_blocks, bm, bn)
+    *,
+    kernel: str = "smm",
+    align: bool = False,
+) -> jax.Array:
+    """Run every group's stacks in ONE fused dispatch (one ``lax.scan``
+    through ``grouped_process_stack``) and return the accumulated
+    ``(n_groups, n_c_blocks, bm, bn)`` C blocks.
+
+    Bit-identity with the per-group ``execute_plan`` loop: each C
+    block's k-run lives in exactly one stack of exactly one group, group
+    offsetting never reorders entries within a stack, and padding rows
+    only touch the global scratch block — so the per-block accumulation
+    order is identical to the looped dispatch.
+    """
+    if plan.n_stacks == 0:
+        return c_blocks
+    g = plan.n_groups
+    bm, bn = int(c_blocks.shape[-2]), int(c_blocks.shape[-1])
+    a = a_blocks.reshape((g * plan.n_a_blocks,) + tuple(a_blocks.shape[-2:]))
+    b = b_blocks.reshape((g * plan.n_b_blocks,) + tuple(b_blocks.shape[-2:]))
+    c = c_blocks.reshape((g * plan.n_c_blocks,) + tuple(c_blocks.shape[-2:]))
+    if align and kernel == "smm":
+        # same MXU-alignment hoist as execute_plan: pad once out here
+        from repro.kernels.smm.ops import mxu_pad_shape
+
+        bk = int(a.shape[2])
+        pm, pk, pn = mxu_pad_shape(bm, bk, bn, True)
+        if (pm, pk, pn) != (bm, bk, bn):
+            a = jnp.pad(a, ((0, 0), (0, pm - bm), (0, pk - bk)))
+            b = jnp.pad(b, ((0, 0), (0, pk - bk), (0, pn - bn)))
+            c = jnp.pad(c, ((0, 0), (0, pm - bm), (0, pn - bn)))
+        align = False
+    from repro.kernels.grouped_gemm.ops import grouped_process_stack
+
+    scratch = jnp.zeros((1,) + tuple(c.shape[1:]), c.dtype)
+    c = jnp.concatenate([c, scratch], axis=0)
+    c = grouped_process_stack(a, b, c, jnp.asarray(plan.triples),
+                              kernel=kernel, align=align)
+    c = c[:-1]
+    if c.shape[1:] != (bm, bn):
+        c = c[:, :bm, :bn]
+    return c.reshape((g, plan.n_c_blocks, bm, bn))
+
+
+def batched_stack_executor(
+    n_groups: int,
+    m: int,
+    k: int,
+    n: int,
+    *,
+    block_m: int,
+    block_k: int,
+    block_n: int,
+    stack_size: Optional[int] = None,
+    align: Optional[bool] = None,
+    kernel: str = "smm",
+    group_masks=None,
+    filter_eps: Optional[float] = None,
+):
+    """Build the fused batched blocked local multiply
+    ``((G, m, k), (G, k, n)) -> (G, m, n)``.
+
+    The batched twin of ``stack_executor``: autotune params are
+    resolved ONCE per batch from the mean group fill (the bucket's
+    occupancy bin — requests in one bucket share stack params by
+    contract), the per-group plans go through the shared engine memo,
+    and the whole batch executes as one fused dispatch.  Note stack
+    splitting and ``align`` padding never change per-block accumulation
+    order (runs are never split; zero-padding adds exact 0.0 terms), so
+    differing tuned params between this and a looped oracle cannot
+    break bit-identity.
+    """
+    from repro.kernels.smm.autotune import best_params_for
+
+    from .densify import from_blocks_batched, to_blocks_batched
+
+    if group_masks is None:
+        group_masks = [{}] * n_groups
+    group_masks = list(group_masks)
+    if len(group_masks) != n_groups:
+        raise ValueError(
+            f"{len(group_masks)} mask groups for {n_groups} groups")
+    nbr, nbk, nbc = m // block_m, k // block_k, n // block_n
+    fills = [
+        _mask_fill(nbr, nbk, nbc,
+                   gm.get("a_mask"), gm.get("b_mask"), gm.get("pair_mask"),
+                   gm.get("a_norms"), gm.get("b_norms"),
+                   gm.get("pair_norms"), filter_eps)
+        for gm in group_masks
+    ]
+    fill = sum(fills) / len(fills)
+    tuned_align, tuned_tile = best_params_for(block_m, block_k, block_n,
+                                              fill=fill)
+    if align is None:
+        align = tuned_align
+    if stack_size is None:
+        stack_size = tuned_tile
+    plan = build_batched_executor_plan(
+        m, k, n, block_m, block_k, block_n, group_masks,
+        stack_size=stack_size, filter_eps=filter_eps)
+
+    def f(a: jax.Array, b: jax.Array) -> jax.Array:
+        if a.shape != (n_groups, m, k) or b.shape != (n_groups, k, n):
+            raise ValueError(
+                f"batched executor built for ({n_groups},{m},{k}) x "
+                f"({n_groups},{k},{n}), got {a.shape} x {b.shape}")
+        a_blocks = to_blocks_batched(a, block_m, block_k)
+        b_blocks = to_blocks_batched(b, block_k, block_n)
+        c_blocks = jnp.zeros((n_groups, nbr * nbc, block_m, block_n),
+                             jnp.float32)
+        c_blocks = execute_batched_plan(plan, a_blocks, b_blocks, c_blocks,
+                                        kernel=kernel, align=align)
+        return from_blocks_batched(c_blocks, nbr, nbc)
+
+    f.batched_plan = plan
+    f.align = align
+    f.stack_size = stack_size
+    f.n_groups = n_groups
+    return f
 
 
 def _mask_fill(

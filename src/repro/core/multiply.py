@@ -394,11 +394,18 @@ def distributed_matmul(
         occ = _global_occupancy(m, k, n, block_m, block_k, block_n,
                                 a_mask, b_mask, a_norms, b_norms,
                                 filter_eps)
+        # a pinned summa with the PUMMA broadcast prices through the
+        # planner's "summa_gather" model — full-K gathered panels, whose
+        # sqrt(P)-fold operand replication the mem feasibility gate must
+        # see (auto never enumerates it; only this pin reaches it)
+        plan_algorithm = None if algorithm == "auto" else algorithm
+        if algorithm == "summa" and kw.get("bcast") == "gather":
+            plan_algorithm = "summa_gather"
         plan = plan_multiply(
             m, k, n, blocks=(block_m, block_k, block_n),
             mesh_shape=mesh_shape, occupancy=occ,
             dtype=jnp.promote_types(a.dtype, b.dtype),
-            algorithm=None if algorithm == "auto" else algorithm,
+            algorithm=plan_algorithm,
             # a fixed algorithm executes the legacy densified default
             # when densify is unset — the plan must describe that, not
             # the planner's own local-path preference

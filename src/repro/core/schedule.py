@@ -187,7 +187,10 @@ def execute_schedule(
         depth = 1
 
     carry = sched.prologue(a_blk, b_blk)
-    c = jnp.zeros((a_blk.shape[0], b_blk.shape[1]), dtype=accum_dtype)
+    # accumulator shape generalizes over leading batch dims: (m, n) for
+    # one product, (G, m, n) for a fused product batch (the batched
+    # multiply stacks G local operands as (G, ml, kl) x (G, kl, nl))
+    c = jnp.zeros(a_blk.shape[:-1] + b_blk.shape[-1:], dtype=accum_dtype)
 
     if depth == 0:
         # Rolled (fori_loop): smaller HLO, no overlap.  Kept for the

@@ -76,8 +76,11 @@ def build_summa_schedule(
 
     def recv(carry, p):
         a_blk, b_blk = carry
-        kl_a = a_blk.shape[1] * pc // n_panels   # A panel width (local)
-        kl_b = b_blk.shape[0] * pr // n_panels   # B panel height (local)
+        # K is the LAST axis of A and second-to-last of B so the slices
+        # are agnostic to leading batch dims ((ml, kl) single product,
+        # (G, ml, kl) fused product batch)
+        kl_a = a_blk.shape[-1] * pc // n_panels  # A panel width (local)
+        kl_b = b_blk.shape[-2] * pr // n_panels  # B panel height (local)
         my_col = jax.lax.axis_index(col_axis)
         my_row = jax.lax.axis_index(row_axis)
         # owner coordinates of panel p
@@ -85,8 +88,10 @@ def build_summa_schedule(
         row_owner = p * pr // n_panels
         a_off = (p % (n_panels // pc)) * kl_a if n_panels != pc else 0
         b_off = (p % (n_panels // pr)) * kl_b if n_panels != pr else 0
-        a_panel = jax.lax.dynamic_slice_in_dim(a_blk, a_off, kl_a, axis=1)
-        b_panel = jax.lax.dynamic_slice_in_dim(b_blk, b_off, kl_b, axis=0)
+        a_panel = jax.lax.dynamic_slice_in_dim(a_blk, a_off, kl_a,
+                                               axis=a_blk.ndim - 1)
+        b_panel = jax.lax.dynamic_slice_in_dim(b_blk, b_off, kl_b,
+                                               axis=b_blk.ndim - 2)
         # broadcast-by-masked-allreduce along the perpendicular axis
         a_panel = jnp.where(my_col == col_owner, a_panel, 0)
         a_panel = jax.lax.psum(a_panel, col_axis)
@@ -291,7 +296,9 @@ def summa_matmul(
                                 out_dtype=out_dtype, pipeline_depth=depth,
                                 accum_dtype=accum)
 
-    spec = P(grid.row_axis, grid.col_axis)
+    # leading batch dims (a fused product batch (G, m, k)) replicate;
+    # the trailing two axes shard over the process grid as always
+    spec = P(*([None] * (a.ndim - 2)), grid.row_axis, grid.col_axis)
     fn = shard_map(body, mesh=mesh, in_specs=(spec, spec),
                    out_specs=spec, check_vma=False)
     return fn(a, b)

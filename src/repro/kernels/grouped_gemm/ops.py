@@ -1,4 +1,19 @@
-"""Public wrapper for the grouped GEMM kernel."""
+"""Public wrappers for the grouped (product-batched) kernels.
+
+Two entry points serve the batched multiply stack (core/engine.py
+``execute_batched_plan`` / core/multiply_batched.py):
+
+  * ``grouped_gemm``          — the Pallas batched dense GEMM
+    ``(E, C, d) @ (E, d, f)``: the *densified* local path of a fused
+    product batch (every group's local multiply is one slab of the
+    batched dot).
+  * ``grouped_process_stack`` — the *blocked* local path: one fused
+    ``lax.scan`` dispatch of a group-offset stack-triple tensor over
+    the flattened block arrays of all groups.  This is the smm stack
+    executor (kernels/smm) with a leading product/group dimension
+    folded into the block indices — N same-block-geometry products run
+    in ONE scan instead of N traces.
+"""
 from __future__ import annotations
 
 import functools
@@ -8,7 +23,7 @@ import jax.numpy as jnp
 
 from .grouped_gemm import grouped_gemm_pallas
 
-__all__ = ["grouped_gemm"]
+__all__ = ["grouped_gemm", "grouped_process_stack"]
 
 
 @functools.partial(jax.jit, static_argnames=("bc", "bf", "bk", "interpret"))
@@ -33,3 +48,41 @@ def grouped_gemm(
     out = grouped_gemm_pallas(t_p, w_p, bc=bc_, bf=bf_, bk=bk_,
                               interpret=interpret)
     return out[:, :c, :f] if (pc or pf) else out
+
+
+def grouped_process_stack(
+    a_blocks: jax.Array,   # (G*Na, bm, bk) flattened group block arrays
+    b_blocks: jax.Array,   # (G*Nb, bk, bn)
+    c_blocks: jax.Array,   # (G*Nc + 1, bm, bn) — scratch block appended
+    triples: jax.Array,    # (S, T, 4) group-offset (a, b, c, valid) rows
+    *,
+    kernel: str = "smm",
+    align: bool = False,
+) -> jax.Array:
+    """Run a fused (multi-product) stack tensor through the smm stack
+    processor in one ``lax.scan``.
+
+    The caller (core/engine.py ``execute_batched_plan``) has already
+    folded the group dimension into the block indices: group ``g``'s
+    triples are offset by ``(g*Na, g*Nb, g*Nc)`` and every padding row
+    points at the single global scratch block ``G*Nc`` with
+    ``valid=0``.  The smm kernel therefore needs no group awareness at
+    all — this IS the unification of the grouped-GEMM dispatch with the
+    stack executor: one trace per (block geometry, stack shape bin),
+    amortized across every product in the batch.
+    """
+    if kernel == "smm":
+        from repro.kernels.smm.ops import smm_process_stack
+
+        def process(c, t):
+            return smm_process_stack(a_blocks, b_blocks, c, t,
+                                     align=align), None
+    elif kernel == "ref":
+        from repro.kernels.smm.ref import smm_process_stack_ref
+
+        def process(c, t):
+            return smm_process_stack_ref(a_blocks, b_blocks, c, t), None
+    else:
+        raise ValueError(f"unknown stack kernel {kernel!r}")
+    c, _ = jax.lax.scan(process, c_blocks, triples)
+    return c

@@ -72,12 +72,14 @@ __all__ = [
     "CandidateCost",
     "DEFAULT_HARDWARE",
     "candidate_cost",
+    "batched_dispatch_cost",
     "enumerate_candidates",
     "feasible",
     "overlap_efficiency",
     "algorithm_steps",
     "ts_crossover_ratio",
     "ALGORITHMS",
+    "BATCHED_ALGORITHMS",
 ]
 
 # bumped once per candidate_cost evaluation; the plan cache test
@@ -85,6 +87,14 @@ __all__ = [
 N_EVALS = 0
 
 ALGORITHMS = ("cannon", "cannon25d", "summa", "ts_k", "ts_m", "ts_n")
+
+# algorithms whose schedules are batch-shape-agnostic and therefore
+# eligible for the fused product-batched dispatch
+# (core/multiply_batched.py); "summa_gather" (summa with
+# bcast="gather") is priced by the model below but only when pinned —
+# it never enters the auto enumeration, its sqrt(P)-fold operand
+# replication makes it a niche small-K configuration
+BATCHED_ALGORITHMS = ("cannon", "summa")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,6 +139,13 @@ class HardwareModel:
     overlap_cannon25d: float = 0.0
     overlap_summa: float = 0.0
     overlap_ts: float = 0.0
+    # per-request host-side dispatch cost: shard_map closure build +
+    # trace/compile-cache lookup + launch of one distributed multiply
+    # (the fixed price a looped dispatch pays PER product and a fused
+    # batched dispatch pays once; see batched_dispatch_cost).  Host
+    # backend ~2 ms measured; ``from_dict`` filters unknown keys so
+    # pre-existing calibration artifacts stay loadable.
+    dispatch_s: float = 2.0e-3
 
     def replace(self, **kw) -> "HardwareModel":
         return dataclasses.replace(self, **kw)
@@ -244,6 +261,13 @@ def _local_geometry(prob: Problem, algorithm: str,
             return (f"shape not divisible by summa grid {pr}x{pc} "
                     f"({n_panels} panels)", ())
         return None, (m // pr, k // n_panels, n // pc, n_panels)
+    if algorithm == "summa_gather":
+        # summa with bcast="gather" (PUMMA-style): one prologue
+        # all-gather, then a SINGLE full-local-K multiply — any grid
+        # shape, K never partitioned locally
+        if m % pr or n % pc:
+            return f"shape not divisible by gather grid {pr}x{pc}", ()
+        return None, (m // pr, k, n // pc, 1)
     if algorithm in ("ts_k", "ts_m", "ts_n"):
         p = prob.p_all
         if algorithm == "ts_k":
@@ -342,7 +366,9 @@ def candidate_cost(
     # the factored row x column unions for summa, all shards for ts_*
     union_ranks = {"cannon": prob.pr * prob.pc,
                    "cannon25d": prob.pr * prob.pc * c_repl,
-                   "summa": prob.pr * prob.pc}.get(algorithm, prob.p_all)
+                   "summa": prob.pr * prob.pc,
+                   "summa_gather": prob.pr * prob.pc}.get(algorithm,
+                                                         prob.p_all)
     compute_1, overhead_1, reason = _local_step_cost(
         hw, prob, densify, ml, kl, nl, stack_tile, smm_flops_per_s,
         union_ranks)
@@ -380,6 +406,22 @@ def candidate_cost(
         messages = 2 * steps
         mem = (prob.m * prob.k + prob.k * prob.n) / prob.p2d * e \
             + ml * nl * e
+    elif algorithm == "summa_gather":
+        # prologue all-gather: each device receives the rest of its
+        # FULL-K row panel of A (over the column axis) and column panel
+        # of B (over the row axis), then computes with no further
+        # communication.  kl == k here, so the resident gathered panels
+        # are a sqrt(P)-fold (pc-fold for A, pr-fold for B) operand
+        # replication relative to the 2-D sharded layout — THAT is the
+        # memory hazard the mem gate below must price (the old model
+        # charged only the sharded operands and let the planner walk
+        # into an OOM at scale).
+        comm_bytes = (ml * kl * (1.0 - 1.0 / prob.pc)
+                      + kl * nl * (1.0 - 1.0 / prob.pr)) * e
+        overlappable = 0.0      # prologue: no earlier compute to hide it
+        messages = max(prob.pc.bit_length() - 1, 1) \
+            + max(prob.pr.bit_length() - 1, 1)
+        mem = (ml * kl + kl * nl + ml * nl) * e
     elif algorithm == "ts_k":
         # one reduce_scatter of the (m, n) f32 partial product: O(1) in
         # P — a *synchronizing* collective with a data dependency on the
@@ -429,6 +471,37 @@ def candidate_cost(
             comm_s, compute_s, overhead_s, overlap_s, mem, total)
     return CandidateCost(algorithm, densify, c_repl, True, "",
                          comm_s, compute_s, overhead_s, overlap_s, mem, total)
+
+
+def batched_dispatch_cost(
+    hw: HardwareModel,
+    chosen: CandidateCost,
+    n_requests: int,
+    padding_frac: float = 0.0,
+) -> Tuple[float, float]:
+    """Predicted ``(fused_s, looped_s)`` for running ``n_requests``
+    same-configuration products through ONE fused batched dispatch vs a
+    Python loop of single dispatches — the planner's fuse-or-loop
+    decision (core/multiply_batched.py + the batching service).
+
+    The looped dispatch pays the per-request fixed costs G times over:
+    message latency / densify copies (``overhead_s``) and the host-side
+    dispatch price (``dispatch_s`` — shard_map closure build, trace
+    lookup, launch).  The fused dispatch moves G times the payload
+    through ONE message sequence and ONE launch, so only the
+    volume-proportional terms (comm, compute, their overlap) scale with
+    G; its penalty is the cross-request padding of the shared stack
+    shape (``padding_frac`` — wasted compute rows, see
+    ``BatchedExecutorPlan.padding_frac``).  Fusing therefore pays
+    exactly when the amortized fixed costs outweigh the padding waste.
+    """
+    g = max(int(n_requests), 1)
+    pf = max(float(padding_frac), 0.0)
+    per_request = chosen.comm_s + chosen.compute_s - chosen.overlap_s
+    looped_s = g * (per_request + chosen.overhead_s + hw.dispatch_s)
+    fused_s = g * (chosen.comm_s + chosen.compute_s * (1.0 + pf)
+                   - chosen.overlap_s) + chosen.overhead_s + hw.dispatch_s
+    return fused_s, looped_s
 
 
 def feasible(prob: Problem, algorithm: str, densify: bool,

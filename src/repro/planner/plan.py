@@ -34,13 +34,14 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from .cost_model import (CandidateCost, HardwareModel, Problem,
-                         algorithm_steps, candidate_cost,
-                         enumerate_candidates, feasible,
+from .cost_model import (BATCHED_ALGORITHMS, CandidateCost, HardwareModel,
+                         Problem, algorithm_steps, batched_dispatch_cost,
+                         candidate_cost, enumerate_candidates, feasible,
                          overlap_efficiency)
 
-__all__ = ["MultiplyPlan", "plan_multiply", "plan_cache_info",
-           "plan_cache_clear"]
+__all__ = ["MultiplyPlan", "BatchedMultiplyPlan", "plan_multiply",
+           "plan_multiply_batched", "plan_cache_info", "plan_cache_clear",
+           "plan_cache_stats"]
 
 _PLAN_CACHE_SIZE = 512
 
@@ -283,9 +284,159 @@ def plan_multiply(
         stack_size, align, hw, _winners_stamp())
 
 
+@dataclasses.dataclass(frozen=True)
+class BatchedMultiplyPlan:
+    """The planner's fuse-or-loop decision for a batch of ``n_requests``
+    same-configuration multiplies, wrapping the shared per-request
+    ``MultiplyPlan``.
+
+    ``fuse`` prices one fused batched dispatch (G-fold payload, ONE
+    message sequence / launch, ``padding_frac`` wasted compute rows)
+    against G single dispatches (G-fold message latency and host
+    dispatch cost) — ``cost_model.batched_dispatch_cost``.  After
+    execution, core/multiply_batched.py attaches the fused dispatch's
+    padding / cross-request plan-sharing accounting as
+    ``executor_stats``.
+    """
+
+    n_requests: int
+    fuse: bool
+    algorithm: str
+    densify: bool
+    padding_frac: float            # estimated cross-request padding waste
+    predicted_fused_s: float
+    predicted_looped_s: float
+    per_request: MultiplyPlan
+    executor_stats: Optional[dict] = None
+
+    # -- per-request plan fields the batched executor consumes ---------
+    @property
+    def stack_tile(self) -> Optional[int]:
+        return self.per_request.stack_tile
+
+    @property
+    def align(self) -> Optional[bool]:
+        return self.per_request.align
+
+    @property
+    def pipeline_depth(self) -> int:
+        return self.per_request.pipeline_depth
+
+    @property
+    def trivial(self) -> bool:
+        return self.per_request.trivial
+
+    @property
+    def predicted_speedup(self) -> float:
+        """Looped-over-fused predicted time ratio (> 1 favours fusing)."""
+        if self.predicted_fused_s <= 0.0:
+            return 1.0
+        return self.predicted_looped_s / self.predicted_fused_s
+
+    def explain(self) -> str:
+        head = (f"batched plan: {self.n_requests} requests -> "
+                + ("FUSE" if self.fuse else "LOOP")
+                + f"  fused={self.predicted_fused_s * 1e3:.3g} ms"
+                + f"  looped={self.predicted_looped_s * 1e3:.3g} ms"
+                + f"  padding={self.padding_frac:.3g}")
+        return head + "\n" + self.per_request.explain()
+
+
+def plan_multiply_batched(
+    n_requests: int,
+    m: int,
+    k: int,
+    n: int,
+    *,
+    blocks: Tuple[int, int, int] = (64, 64, 64),
+    mesh_shape=(1, 1),
+    occupancy: float = 1.0,
+    dtype=np.float32,
+    algorithm: Optional[str] = None,
+    densify: Optional[bool] = None,
+    padding_frac: float = 0.0,
+    stack_size: Optional[int] = None,
+    align: Optional[bool] = None,
+    hw: Optional[HardwareModel] = None,
+) -> BatchedMultiplyPlan:
+    """Plan a batch of ``n_requests`` same-geometry multiplies.
+
+    The per-request choice runs through the ordinary (LRU-cached)
+    ``plan_multiply`` restricted to the batch-capable algorithms
+    (``cost_model.BATCHED_ALGORITHMS`` — the schedules that generalize
+    over a leading product dim); ``occupancy`` is the batch's MEAN
+    retained-triple fraction and ``padding_frac`` the caller's estimate
+    of the fused dispatch's cross-request padding waste (the
+    occupancy-spread of the bucket).  An empty batch plan
+    (``trivial``) always reports ``fuse=False`` — there is nothing to
+    amortize.
+    """
+    if algorithm is not None and algorithm not in BATCHED_ALGORITHMS:
+        raise ValueError(
+            f"batched dispatch supports {BATCHED_ALGORITHMS}, got "
+            f"{algorithm!r}")
+    algos = (algorithm,) if algorithm is not None else BATCHED_ALGORITHMS
+    plans = [
+        plan_multiply(m, k, n, blocks=blocks, mesh_shape=mesh_shape,
+                      occupancy=occupancy, dtype=dtype, algorithm=algo,
+                      densify=densify, stack_size=stack_size, align=align,
+                      hw=hw)
+        for algo in algos
+    ]
+    best = min(plans, key=lambda p: p.predicted_s)
+    g = int(n_requests)
+    if best.trivial:
+        return BatchedMultiplyPlan(
+            n_requests=g, fuse=False, algorithm=best.algorithm,
+            densify=best.densify, padding_frac=float(padding_frac),
+            predicted_fused_s=0.0, predicted_looped_s=0.0,
+            per_request=best)
+    if hw is None:
+        from .calibrate import get_hardware_model
+
+        hw = get_hardware_model()
+    chosen = best.chosen
+    if chosen is not None:
+        fused_s, looped_s = batched_dispatch_cost(
+            hw, chosen, g, padding_frac)
+    else:
+        # forced configuration with no costed candidate: amortize the
+        # dispatch price alone
+        looped_s = g * (best.predicted_s + hw.dispatch_s)
+        fused_s = g * best.predicted_s + hw.dispatch_s
+    return BatchedMultiplyPlan(
+        n_requests=g,
+        fuse=bool(g > 1 and fused_s <= looped_s),
+        algorithm=best.algorithm,
+        densify=best.densify,
+        padding_frac=float(padding_frac),
+        predicted_fused_s=fused_s,
+        predicted_looped_s=looped_s,
+        per_request=best,
+    )
+
+
 def plan_cache_info():
     return _plan_cached.cache_info()
 
 
 def plan_cache_clear() -> None:
     _plan_cached.cache_clear()
+
+
+def plan_cache_stats() -> dict:
+    """Planner LRU accounting: hits / misses / evictions.
+
+    ``evictions`` is derived as ``misses - currsize``: every miss
+    inserts one entry, so entries beyond the current size must have
+    been evicted.  Valid because ``plan_cache_clear`` resets the
+    counters and the size together.
+    """
+    info = _plan_cached.cache_info()
+    return {
+        "hits": int(info.hits),
+        "misses": int(info.misses),
+        "currsize": int(info.currsize),
+        "maxsize": int(info.maxsize),
+        "evictions": max(int(info.misses) - int(info.currsize), 0),
+    }

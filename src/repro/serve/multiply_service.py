@@ -1,0 +1,201 @@
+"""Continuous-batching request layer over ``dbcsr.multiply_batched``.
+
+The batched executor (core/multiply_batched.py) turns N
+same-configuration products into one dispatch — but somebody has to
+FIND those N products.  In a serving setting (property evaluations,
+k-point workers, ensemble members issuing multiplies independently)
+they arrive one at a time; this module is the accumulation layer that
+turns the stream into fused batches:
+
+  * ``submit(a, b)`` enqueues a request and returns a ticket id —
+    nothing executes yet;
+  * requests accumulate in buckets keyed by the batching contract
+    ``(geometry, occupancy-bin, eps)`` (the same ``_bucket_key`` as
+    ``dbcsr.multiply_batched`` — only key-identical requests can share
+    a fused dispatch);
+  * a bucket drains — ONE fused dispatch for its whole contents —
+    when it reaches ``max_batch`` requests OR its oldest request's
+    latency SLO expires (``slo_s`` seconds after submission),
+    whichever comes first.  The SLO bounds the latency cost of waiting
+    for batch-mates: a request never waits longer than ``slo_s`` past
+    submission before its bucket is dispatched (modulo the caller
+    actually pumping ``poll``).
+
+The service is deliberately SYNCHRONOUS (no threads): draining happens
+inside ``poll()`` / ``flush()`` on the caller's thread, so the caller
+controls when device work runs — the natural fit for a jax host
+process, and trivially testable with an injected ``clock``.
+
+Typical pump loop::
+
+    svc = MultiplyService(mesh, slo_s=0.005, max_batch=32)
+    tickets = [svc.submit(a, b) for (a, b) in stream]
+    svc.flush()                      # or poll() inside the loop
+    results = [svc.result(t) for t in tickets]
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.dbcsr import DBCSRMatrix, _bucket_key, multiply_batched
+
+__all__ = ["MultiplyService", "PendingRequest"]
+
+
+@dataclasses.dataclass
+class PendingRequest:
+    """One queued multiply: operands plus its SLO accounting."""
+
+    ticket: int
+    a: DBCSRMatrix
+    b: DBCSRMatrix
+    submit_t: float
+
+    def deadline(self, slo_s: float) -> float:
+        return self.submit_t + slo_s
+
+
+class MultiplyService:
+    """Accumulate multiply requests and drain them as fused batches.
+
+    Parameters
+    ----------
+    mesh        the device mesh every request executes on
+    slo_s       latency SLO: a bucket is dispatched no later than the
+                first ``poll()`` after its OLDEST request has waited
+                ``slo_s`` seconds (0 = dispatch every request on the
+                next poll — batching only among same-poll arrivals)
+    max_batch   dispatch a bucket as soon as it holds this many
+                requests, SLO notwithstanding
+    filter_eps  norm-filter threshold applied to every request (part of
+                the bucket key — a service instance is eps-uniform)
+    fused       pin the fuse-or-loop choice per bucket (None = planner)
+    clock       injectable time source (``time.monotonic``-like), for
+                deterministic tests
+    **kw        forwarded to ``dbcsr.multiply_batched`` (algorithm,
+                densify, local_kernel, pipeline_depth, ...)
+
+    ``stats()`` reports request/dispatch counters, per-bucket fusion
+    accounting, and completion-latency percentiles (p50/p99 of
+    ``completion - submit`` over finished requests).
+    """
+
+    def __init__(
+        self,
+        mesh,
+        *,
+        slo_s: float = 0.01,
+        max_batch: int = 32,
+        filter_eps: Optional[float] = None,
+        fused: Optional[bool] = None,
+        clock: Callable[[], float] = time.monotonic,
+        **kw,
+    ):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.mesh = mesh
+        self.slo_s = float(slo_s)
+        self.max_batch = int(max_batch)
+        self.filter_eps = filter_eps
+        self.fused = fused
+        self.clock = clock
+        self.kw = kw
+        self._next_ticket = 0
+        self._queues: Dict[tuple, List[PendingRequest]] = {}
+        self._results: Dict[int, DBCSRMatrix] = {}
+        self._latencies: List[float] = []
+        self._n_dispatches = 0
+        self._n_fused_requests = 0
+        self._n_looped_requests = 0
+        self._bucket_reports: List[dict] = []
+
+    # -- request side --------------------------------------------------
+    def submit(self, a: DBCSRMatrix, b: DBCSRMatrix) -> int:
+        """Enqueue C = A @ B; returns a ticket for ``result()``.
+
+        Nothing executes here — the request waits for batch-mates
+        until its bucket fills (``max_batch``) or its SLO expires,
+        both checked by ``poll()``/``flush()``.
+        """
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        key = _bucket_key(a, b, self.filter_eps)
+        self._queues.setdefault(key, []).append(
+            PendingRequest(ticket, a, b, self.clock()))
+        return ticket
+
+    def poll(self) -> List[int]:
+        """Dispatch every bucket that is due (full, or oldest request
+        past its SLO deadline); returns the tickets completed by this
+        call.  Buckets still inside their SLO window keep waiting for
+        batch-mates."""
+        now = self.clock()
+        done: List[int] = []
+        for key in list(self._queues):
+            q = self._queues[key]
+            while len(q) >= self.max_batch:
+                done += self._dispatch(key, q[:self.max_batch])
+                del q[:self.max_batch]
+            if q and q[0].deadline(self.slo_s) <= now:
+                done += self._dispatch(key, q)
+                q.clear()
+            if not q:
+                del self._queues[key]
+        return done
+
+    def flush(self) -> List[int]:
+        """Dispatch everything queued regardless of SLO/size."""
+        done: List[int] = []
+        for key in list(self._queues):
+            done += self._dispatch(key, self._queues.pop(key))
+        return done
+
+    def result(self, ticket: int) -> DBCSRMatrix:
+        """Pop a completed product (KeyError while still queued —
+        ``poll()``/``flush()`` first)."""
+        return self._results.pop(ticket)
+
+    @property
+    def n_pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    # -- dispatch ------------------------------------------------------
+    def _dispatch(self, key: tuple, batch: List[PendingRequest]) -> List[int]:
+        results, report = multiply_batched(
+            [(r.a, r.b) for r in batch], mesh=self.mesh,
+            filter_eps=self.filter_eps, fused=self.fused,
+            return_plan=True, **self.kw)
+        t_done = self.clock()
+        self._n_dispatches += 1
+        fused = bool(report["buckets"]
+                     and all(b["fused"] for b in report["buckets"]))
+        if fused:
+            self._n_fused_requests += len(batch)
+        else:
+            self._n_looped_requests += len(batch)
+        self._bucket_reports.append({
+            "key": key, "n_requests": len(batch), "fused": fused,
+            "report": report})
+        for r, c in zip(batch, results):
+            self._results[r.ticket] = c
+            self._latencies.append(t_done - r.submit_t)
+        return [r.ticket for r in batch]
+
+    # -- observability -------------------------------------------------
+    def stats(self) -> dict:
+        lat = np.asarray(self._latencies, dtype=np.float64)
+        return {
+            "n_requests": self._next_ticket,
+            "n_pending": self.n_pending,
+            "n_completed": len(self._latencies),
+            "n_dispatches": self._n_dispatches,
+            "n_fused_requests": self._n_fused_requests,
+            "n_looped_requests": self._n_looped_requests,
+            "latency_p50_s": float(np.percentile(lat, 50)) if lat.size else 0.0,
+            "latency_p99_s": float(np.percentile(lat, 99)) if lat.size else 0.0,
+            "buckets": list(self._bucket_reports),
+        }
