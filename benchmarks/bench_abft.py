@@ -1,0 +1,174 @@
+"""ABFT verified multiply: checksum overhead + chaos detection gate.
+
+Huang–Abraham block checksums (repro.robustness.abft) make every
+product self-verifying: two O(N^2/nblocks) residual reductions bound
+each block row/column of C against independently-computed checksums of
+A and B, with a norm-aware tolerance (PR 5's block-norm cache) that
+absorbs float accumulation order and eps-filtered triples.  This bench
+answers the two questions that decide whether ``verify=`` is usable in
+production:
+
+  overhead   wall-clock cost of ``verify="checksum"`` vs ``verify=None``
+             on the pinned deterministic config — the CI gate requires
+             <= 25% (ISSUE acceptance; the planner prices the same
+             ratio analytically for ``verify="auto"``, reported next to
+             the measurement)
+  chaos      an injected corruption sweep (bitflip / NaN / scale into
+             the max-norm result block) must be detected, localized to
+             the exact block, repaired, and bitwise-equal to the clean
+             product; clean and eps-filtered runs must report ZERO
+             false positives
+
+    PYTHONPATH=src python -m benchmarks.bench_abft [--smoke] [--check]
+
+``--smoke`` shrinks geometry/reps and writes
+artifacts/bench/abft_smoke.json (scripts/ci.sh runs it with --check);
+the full run writes artifacts/bench/abft.json.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=1")
+
+import argparse
+import json
+import time
+
+import numpy as np
+import jax
+
+from repro.compat import make_mesh
+from repro.core import dbcsr
+from repro.robustness import chaos
+
+# pinned deterministic config: overhead is verified-vs-unverified on
+# the IDENTICAL execution path, so the delta is pure ABFT cost
+EXEC_KW = dict(algorithm="cannon", densify=False, local_kernel="ref",
+               pipeline_depth=1)
+
+OVERHEAD_GATE = 0.25
+
+
+def bench_overhead(mesh, geometry, block, reps, rng):
+    m, k, n = geometry
+    a = dbcsr.create(rng.randn(m, k).astype(np.float32), mesh=mesh,
+                     block_size=block)
+    b = dbcsr.create(rng.randn(k, n).astype(np.float32), mesh=mesh,
+                     block_size=block)
+    kw = dict(mesh=mesh, **EXEC_KW)
+
+    # warm-up: compile both paths before timing
+    for v in (None, "checksum"):
+        c = dbcsr.multiply(a, b, verify=v, **kw)
+        jax.block_until_ready(c.data)
+
+    def best_of(verify):
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            c = dbcsr.multiply(a, b, verify=verify, **kw)
+            jax.block_until_ready(c.data)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_plain = best_of(None)
+    t_verified = best_of("checksum")
+    overhead = (t_verified - t_plain) / t_plain
+
+    # the planner's analytic price for the same decision (verify="auto")
+    c, plan = dbcsr.multiply(a, b, verify="auto", return_plan=True, **kw)
+    pricing = {key: plan.verification[key]
+               for key in ("predicted_overhead_s", "overhead_frac",
+                           "budget") if key in plan.verification}
+    pricing["auto_enabled"] = bool(plan.verification["enabled"])
+
+    row = {
+        "geometry": list(geometry), "block": block, "reps": reps,
+        "unverified_s": t_plain, "verified_s": t_verified,
+        "overhead_frac": overhead, "gate": OVERHEAD_GATE,
+        "planner": pricing,
+    }
+    print(f"overhead: {m}x{k}x{n} block {block}  "
+          f"plain {t_plain*1e3:8.2f} ms  verified {t_verified*1e3:8.2f} ms  "
+          f"+{overhead*100:5.1f}%  (gate {OVERHEAD_GATE*100:.0f}%, "
+          f"planner predicts {pricing.get('overhead_frac', float('nan'))*100:5.1f}%)")
+    return row
+
+
+def bench_chaos(mesh, geometry, block, seed):
+    rows = chaos.run_injection_matrix(
+        mesh, "1x1", algorithms=("cannon", "summa"), fills=(1.0, 0.05),
+        modes=("bitflip", "nan", "scale"), geometry=geometry, block=block,
+        seed=seed)
+    inject = [r for r in rows if r["mode"] not in ("clean", "clean_eps")]
+    clean = [r for r in rows if r["mode"] in ("clean", "clean_eps")]
+    summary = {
+        "n_injections": len(inject),
+        "n_detected": sum(r["detected"] for r in inject),
+        "n_localized_exact": sum(r["localized_exact"] for r in inject),
+        "n_repaired_bitwise": sum(r["bitwise_clean"] for r in inject),
+        "n_clean_runs": len(clean),
+        "n_false_positives": sum(r["detected"] for r in clean),
+        "rows": rows,
+    }
+    print(f"chaos:    {summary['n_detected']}/{summary['n_injections']} "
+          f"detected, {summary['n_localized_exact']} localized exactly, "
+          f"{summary['n_repaired_bitwise']} repaired bitwise-clean; "
+          f"{summary['n_false_positives']}/{summary['n_clean_runs']} "
+          f"false positives on clean runs")
+    return summary
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small geometry, few reps -> abft_smoke.json")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless verified overhead <= 25%, "
+                         "every injection is detected+localized+repaired "
+                         "bitwise, and clean runs have zero false "
+                         "positives (CI gate)")
+    ap.add_argument("--out", default="artifacts/bench")
+    args = ap.parse_args()
+
+    if args.smoke:
+        geometry, block, reps = (256, 256, 256), 32, 2
+        chaos_geometry = (128, 128, 128)
+    else:
+        geometry, block, reps = (512, 512, 512), 32, 3
+        chaos_geometry = (256, 256, 256)
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    rng = np.random.RandomState(0)
+
+    overhead = bench_overhead(mesh, geometry, block, reps, rng)
+    chaos_summary = bench_chaos(mesh, chaos_geometry, block, seed=0)
+
+    gates = {
+        "overhead_ok": bool(overhead["overhead_frac"] <= OVERHEAD_GATE),
+        "all_detected": chaos_summary["n_detected"]
+        == chaos_summary["n_injections"],
+        "all_localized": chaos_summary["n_localized_exact"]
+        == chaos_summary["n_injections"],
+        "all_repaired_bitwise": chaos_summary["n_repaired_bitwise"]
+        == chaos_summary["n_injections"],
+        "no_false_positives": chaos_summary["n_false_positives"] == 0,
+    }
+    result = {
+        "exec_kw": {k: str(v) for k, v in EXEC_KW.items()},
+        "overhead": overhead,
+        "chaos": chaos_summary,
+        "gates": gates,
+    }
+    os.makedirs(args.out, exist_ok=True)
+    name = "abft_smoke.json" if args.smoke else "abft.json"
+    path = os.path.join(args.out, name)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    print("gates:", gates)
+    print("wrote ->", path)
+    if args.check and not all(gates.values()):
+        raise SystemExit(f"ABFT gate failed: "
+                         f"{[k for k, v in gates.items() if not v]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -45,3 +45,18 @@ python benchmarks/bench_overlap.py --smoke --check
 # fails the build unless the fused path clears 2x looped requests/s on
 # >= 16 small same-geometry requests (results cross-checked bitwise)
 python benchmarks/bench_batched.py --smoke --check
+
+# ABFT self-verifying multiply (repro.robustness): verified-vs-plain
+# overhead on the pinned config plus an injected-corruption sweep
+# (artifacts/bench/abft_smoke.json) — --check fails the build unless
+# verify="checksum" costs <= 25% wall-clock, every injected corruption
+# is detected, localized to the exact block, and repaired to the
+# bitwise-clean product, with zero false positives on clean and
+# eps-filtered runs
+python benchmarks/bench_abft.py --smoke --check
+
+# chaos gate: the full injection matrix ({cannon,summa} x {dense,5%}
+# x {bitflip,nan,scale}) on 1x1 and 2x2 meshes via the CLI
+# (artifacts/bench/chaos_smoke.json) — nonzero exit unless every cell
+# passes
+PYTHONPATH=src python -m repro.robustness.chaos --report

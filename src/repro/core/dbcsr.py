@@ -272,6 +272,7 @@ def multiply(
     algorithm: str = "auto",
     densify: Optional[bool] = None,
     filter_eps: Optional[float] = None,
+    verify: Optional[str] = None,
     return_plan: bool = False,
     **kw,
 ) -> DBCSRMatrix:
@@ -318,6 +319,33 @@ def multiply(
     (only ``data``/``layout``/``grid``/``block_mask``/``block_norms``
     do).
 
+    ``verify`` — ABFT self-verification (repro.robustness):
+
+      * ``"checksum"`` verifies the raw product against independently
+        computed Huang–Abraham block checksums *before* the result mask
+        is applied; detection tolerances scale with the PR 5 norm cache
+        (``||A_ik||_F * ||B_kj||_F`` bounds plus the eps-filtered
+        dropped mass), so float accumulation order and ``filter_eps``
+        dropping never false-positive.  A detected corruption is
+        localized to its exact block coordinates, repaired by ONE
+        deterministic recompute of the flagged blocks (bitwise equal to
+        a clean run), and reported; corruption that survives repair
+        raises ``repro.robustness.guards.CorruptionDetectedError``.
+        Operands are screened by the NaN/Inf tripwires first
+        (``NonFiniteOperandError`` — poison inputs are not a checksum
+        problem).
+      * ``"auto"`` enables verification only when the planner prices
+        its checksum overhead (extra flops + comm for the augmented
+        row/column — ``cost_model.verify_overhead_s``) within
+        ``verify_budget`` (default 25%) of the plan's predicted time.
+      * ``None`` (default) adds zero work — bit-identical to the
+        unverified multiply.
+
+    The outcome is observable as ``C.verification`` (and
+    ``plan.verification``): a dict with the pricing decision and the
+    ``VerificationReport`` (``detected``, flagged ``(i, j)`` blocks,
+    residuals vs tolerances, ``repaired``) when verification ran.
+
     Many small products?  See ``multiply_batched``: it fuses
     same-geometry requests into one dispatch, amortizing the per-call
     trace/launch cost that dominates small multiplies.  Batching and
@@ -337,7 +365,7 @@ def multiply(
         block_n=b.layout.block_cols,
         a_mask=a.block_mask, b_mask=b.block_mask,
         a_norms=an, b_norms=bn, filter_eps=filter_eps,
-        return_plan=True, **kw,
+        verify=verify, return_plan=True, **kw,
     )
     c_layout = BlockLayout(a.layout.rows, b.layout.cols,
                            a.layout.block_rows, b.layout.block_cols)
@@ -351,6 +379,7 @@ def multiply(
                                 b.layout.block_cols)
     c = DBCSRMatrix(c_data, c_layout, a.grid, mask)
     c.last_plan = plan
+    c.verification = plan.verification
     return (c, plan) if return_plan else c
 
 
@@ -385,12 +414,23 @@ def _bucket_key(a: DBCSRMatrix, b: DBCSRMatrix,
 
 
 def _execute_bucket(group, *, mesh, algorithm, densify, filter_eps,
-                    fused, **kw):
+                    fused, verify=None, **kw):
     """Run one bucket of same-key requests: fused (one batched
     dispatch) or looped (per-request ``multiply``), per the planner's
-    fuse-or-loop pricing unless ``fused`` pins it."""
+    fuse-or-loop pricing unless ``fused`` pins it.
+
+    ``verify`` forces the looped path: ABFT checksums verify one
+    product at a time (verification of the fused batched dispatch is an
+    open ROADMAP item), so a verified bucket trades the fusion win for
+    per-request detection/repair."""
     from .multiply_batched import BATCHED_ALGORITHMS
 
+    if verify is not None:
+        if fused:
+            raise ValueError(
+                "verify= requires the looped path (ABFT on the fused "
+                "batched dispatch is not implemented); drop fused=True")
+        fused = False
     a0, b0 = group[0]
     g = len(group)
     an = bn = None
@@ -440,7 +480,8 @@ def _execute_bucket(group, *, mesh, algorithm, densify, filter_eps,
 
     if not fuse:
         out = [multiply(a, b, mesh=mesh, algorithm=algorithm,
-                        densify=densify, filter_eps=filter_eps, **kw)
+                        densify=densify, filter_eps=filter_eps,
+                        verify=verify, **kw)
                for a, b in group]
         return out, {"fused": False, "plan": plan}
 
@@ -483,6 +524,7 @@ def multiply_batched(
     densify: Optional[bool] = None,
     filter_eps: Optional[float] = None,
     fused: Optional[bool] = None,
+    verify: Optional[str] = None,
     return_plan: bool = False,
     **kw,
 ):
@@ -507,6 +549,12 @@ def multiply_batched(
     {None, 0.0} the fused blocked path is bit-identical to the looped
     one (core/multiply_batched bit-identity contract).
 
+    ``verify`` (repro.robustness): per-request ABFT verification with
+    the same semantics as ``multiply(verify=...)``; it forces the
+    looped path (checksums on the fused batched dispatch are an open
+    ROADMAP item), so a verified bucket trades the fusion win for
+    per-request corruption detection and repair.
+
     ``return_plan=True`` returns ``(results, report)`` where the
     report carries per-bucket fusion stats: request count, the
     fuse-or-loop decision, and the executed plan (padding fractions,
@@ -524,7 +572,8 @@ def multiply_batched(
     for key, idxs in buckets.items():
         out, rep = _execute_bucket(
             [requests[i] for i in idxs], mesh=mesh, algorithm=algorithm,
-            densify=densify, filter_eps=filter_eps, fused=fused, **kw)
+            densify=densify, filter_eps=filter_eps, fused=fused,
+            verify=verify, **kw)
         for i, c in zip(idxs, out):
             results[i] = c
         bucket_reports.append({

@@ -290,6 +290,45 @@ def _schedule_stats(algorithm: str, *, grid, mesh, local_shape, itemsize,
     }
 
 
+def _verified_result(verify, a, b, c, rerun, *, plan, block_m, block_k,
+                     block_n, a_mask, b_mask, a_norms, b_norms, filter_eps,
+                     verify_budget):
+    """ABFT verification of a raw product (repro.robustness.abft):
+    price the checksum overhead against the plan (``verify="auto"``),
+    screen the operands with the finite tripwires, apply any installed
+    chaos hook (test-only corruption — modelling a soft error between
+    compute and verification), then verify / one-shot-repair.  Returns
+    ``(c, verification_dict)``; the dict lands on the plan as
+    ``plan.verification``."""
+    from repro.planner.plan import decide_verify
+
+    m, k = a.shape
+    n = b.shape[1]
+    itemsize = int(jnp.dtype(jnp.promote_types(a.dtype, b.dtype)).itemsize)
+    pricing = decide_verify(plan, m, k, n,
+                            blocks=(block_m, block_k, block_n),
+                            itemsize=itemsize, budget=verify_budget)
+    enabled = verify == "checksum" or (verify == "auto"
+                                       and pricing["auto_enabled"])
+    if plan is not None and getattr(plan, "trivial", False):
+        enabled = False  # empty product: nothing executed to corrupt
+    info = {"mode": verify, "enabled": enabled, **pricing, "report": None}
+    if not enabled:
+        return c, info
+    from repro.robustness import abft, chaos, guards
+
+    guards.assert_finite(a, "A")
+    guards.assert_finite(b, "B")
+    c = chaos.apply_result_hook(c)
+    c, report = abft.verify_and_repair(
+        a, b, c, recompute=rerun,
+        block_m=block_m, block_k=block_k, block_n=block_n,
+        a_mask=a_mask, b_mask=b_mask, a_norms=a_norms, b_norms=b_norms,
+        filter_eps=filter_eps)
+    info["report"] = report
+    return jnp.asarray(c), info
+
+
 def distributed_matmul(
     a: jax.Array,
     b: jax.Array,
@@ -313,6 +352,8 @@ def distributed_matmul(
     precision=jax.lax.Precision.DEFAULT,
     pipeline_depth: Optional[int] = None,
     double_buffer: Optional[bool] = None,
+    verify: Optional[str] = None,
+    verify_budget: Optional[float] = None,
     return_plan: bool = False,
     **kw,
 ) -> jax.Array:
@@ -363,6 +404,20 @@ def distributed_matmul(
     and the overlap default otherwise.  ``double_buffer`` is the legacy
     spelling (True -> 2, False -> 0).
 
+    ``verify`` — ABFT self-verification (repro.robustness.abft):
+    ``"checksum"`` verifies the product against independently computed
+    Huang–Abraham block checksums (norm-aware tolerances so eps
+    filtering and float accumulation never false-positive), localizes
+    any corrupted block, and repairs it by one deterministic recompute
+    of the flagged blocks; ``"auto"`` enables verification only when
+    its priced overhead fits ``verify_budget`` (default 25%) of the
+    plan's predicted time; ``None`` (default) is bit-identical to the
+    pre-verification dispatcher with zero added work.  The outcome
+    lands on the returned plan as ``plan.verification`` (pricing +
+    :class:`~repro.robustness.abft.VerificationReport`).  Unrepairable
+    corruption raises
+    :class:`~repro.robustness.guards.CorruptionDetectedError`.
+
     ``return_plan=True`` returns ``(C, MultiplyPlan)`` where the plan
     records the planner's decision (with per-candidate predicted costs,
     see ``MultiplyPlan.explain()``) plus the executed blocked-path
@@ -374,6 +429,9 @@ def distributed_matmul(
     k2, n = b.shape
     if k != k2:
         raise ValueError(f"inner dims disagree: {a.shape} @ {b.shape}")
+    if verify not in (None, "checksum", "auto"):
+        raise ValueError(
+            f"verify must be None, 'checksum' or 'auto', got {verify!r}")
 
     filtering = filter_eps is not None
     if filtering and a_norms is None and b_norms is None:
@@ -385,7 +443,7 @@ def distributed_matmul(
         b_norms = block_norms_of(b, block_k, block_n, b_mask)
 
     plan = None
-    if algorithm == "auto" or return_plan:
+    if algorithm == "auto" or return_plan or verify is not None:
         from repro.planner.plan import plan_multiply
 
         pr0, pc0 = grid.grid_shape(mesh)
@@ -539,22 +597,35 @@ def distributed_matmul(
                     **norm_kw, **blocked_kw)
 
     # ---- data-exchange algorithm (all via the schedule engine) --------
-    if algorithm == "cannon":
-        c = cannon_matmul(
+    # The dispatch is wrapped in a re-runnable closure: at a fixed
+    # config the whole pipeline is deterministic, so the ABFT repair
+    # path re-executes it once and splices only the flagged blocks —
+    # bitwise equal to a clean run.
+    def _run():
+        if algorithm == "cannon":
+            return cannon_matmul(
+                a, b, mesh=mesh, grid=grid, local_matmul=lm,
+                precision=precision, pipeline_depth=depth, **kw)
+        if algorithm == "cannon25d":
+            return cannon25d_matmul(
+                a, b, mesh=mesh, grid=grid, local_matmul=lm,
+                precision=precision, pipeline_depth=depth, **kw)
+        if algorithm in ("ts_k", "ts_m", "ts_n"):
+            return tall_skinny_matmul(
+                a, b, mesh=mesh, grid=grid, mode=algorithm, local_matmul=lm,
+                precision=precision, pipeline_depth=depth, **kw)
+        return summa_matmul(
             a, b, mesh=mesh, grid=grid, local_matmul=lm,
             precision=precision, pipeline_depth=depth, **kw)
-    elif algorithm == "cannon25d":
-        c = cannon25d_matmul(
-            a, b, mesh=mesh, grid=grid, local_matmul=lm,
-            precision=precision, pipeline_depth=depth, **kw)
-    elif algorithm in ("ts_k", "ts_m", "ts_n"):
-        c = tall_skinny_matmul(
-            a, b, mesh=mesh, grid=grid, mode=algorithm, local_matmul=lm,
-            precision=precision, pipeline_depth=depth, **kw)
-    else:
-        c = summa_matmul(
-            a, b, mesh=mesh, grid=grid, local_matmul=lm,
-            precision=precision, pipeline_depth=depth, **kw)
+
+    c = _run()
+    verification = None
+    if verify is not None:
+        c, verification = _verified_result(
+            verify, a, b, c, _run, plan=plan,
+            block_m=block_m, block_k=block_k, block_n=block_n,
+            a_mask=a_mask, b_mask=b_mask, a_norms=a_norms, b_norms=b_norms,
+            filter_eps=filter_eps, verify_budget=verify_budget)
     if not return_plan:
         return c
     import dataclasses as _dc
@@ -566,5 +637,6 @@ def distributed_matmul(
         schedule_stats=_schedule_stats(
             algorithm, grid=grid, mesh=mesh, local_shape=(ml, kl, nl),
             itemsize=itemsize, lm=lm, densify=densify, pipeline_depth=depth,
-            reduce_kw=kw))
+            reduce_kw=kw),
+        verification=verification)
     return c, plan

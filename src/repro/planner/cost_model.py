@@ -73,6 +73,7 @@ __all__ = [
     "DEFAULT_HARDWARE",
     "candidate_cost",
     "batched_dispatch_cost",
+    "verify_overhead_s",
     "enumerate_candidates",
     "feasible",
     "overlap_efficiency",
@@ -502,6 +503,44 @@ def batched_dispatch_cost(
     fused_s = g * (chosen.comm_s + chosen.compute_s * (1.0 + pf)
                    - chosen.overlap_s) + chosen.overhead_s + hw.dispatch_s
     return fused_s, looped_s
+
+
+def verify_overhead_s(
+    hw: HardwareModel,
+    m: int,
+    k: int,
+    n: int,
+    block_m: int,
+    block_n: int,
+    itemsize: int,
+) -> float:
+    """Predicted price of ABFT checksum verification of one product
+    (repro.robustness.abft) — what makes ``verify="auto"`` a costed
+    decision like every other planner choice.
+
+    Charged terms, matching what ``verify_product`` executes:
+
+      * the augmented checksum contractions ``S_A @ B`` (block_m x k x n)
+        and ``A @ T_B`` (m x k x block_n) at the dense-GEMM rate, plus
+        the C row/column reductions (~2*m*n flop-equivalents),
+      * one pass over each payload for the operand/result finite
+        tripwires and checksum sums, priced as copy bandwidth,
+      * the checksum products' cross-device reduction volume
+        ``(block_m*n + m*block_n) * e`` plus a handful of collective
+        latencies (residuals land on host).
+
+    Relative to the multiply's own 2*m*k*n flops the flop overhead is
+    ~(block_m/m + block_n/n): small blocks on big matrices verify for
+    a few percent; tiny problems are latency-dominated and ``auto``
+    correctly declines them.
+    """
+    flops = 2.0 * block_m * k * n + 2.0 * m * k * block_n + 2.0 * m * n
+    touch_bytes = 2.0 * (m * k + k * n + m * n) * itemsize
+    comm_bytes = (block_m * n + m * block_n) * itemsize
+    return (flops / hw.flops_per_s
+            + touch_bytes / hw.densify_bytes_per_s
+            + comm_bytes / hw.bytes_per_s
+            + 4.0 * hw.latency_s)
 
 
 def feasible(prob: Problem, algorithm: str, densify: bool,

@@ -37,13 +37,19 @@ import numpy as np
 from .cost_model import (BATCHED_ALGORITHMS, CandidateCost, HardwareModel,
                          Problem, algorithm_steps, batched_dispatch_cost,
                          candidate_cost, enumerate_candidates, feasible,
-                         overlap_efficiency)
+                         overlap_efficiency, verify_overhead_s)
 
 __all__ = ["MultiplyPlan", "BatchedMultiplyPlan", "plan_multiply",
-           "plan_multiply_batched", "plan_cache_info", "plan_cache_clear",
-           "plan_cache_stats"]
+           "plan_multiply_batched", "decide_verify", "plan_cache_info",
+           "plan_cache_clear", "plan_cache_stats",
+           "DEFAULT_VERIFY_BUDGET"]
 
 _PLAN_CACHE_SIZE = 512
+
+# verify="auto" enables checksum verification only when its predicted
+# overhead stays within this fraction of the plan's predicted time —
+# the same 25% ceiling bench_abft.py gates the MEASURED overhead at.
+DEFAULT_VERIFY_BUDGET = 0.25
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +77,10 @@ class MultiplyPlan:
     overlap_eff: float = 0.0       # calibrated overlap term of the winner
     executor_stats: Optional[dict] = None
     schedule_stats: Optional[dict] = None
+    # ABFT outcome (core/multiply.py attaches post-execution, like the
+    # stats above — cached plan objects stay verification-free): pricing
+    # from decide_verify plus the VerificationReport when it ran
+    verification: Optional[dict] = None
 
     @property
     def chosen(self) -> Optional[CandidateCost]:
@@ -414,6 +424,50 @@ def plan_multiply_batched(
         predicted_looped_s=looped_s,
         per_request=best,
     )
+
+
+def decide_verify(
+    plan: Optional[MultiplyPlan],
+    m: int,
+    k: int,
+    n: int,
+    *,
+    blocks: Tuple[int, int, int],
+    itemsize: int = 4,
+    budget: Optional[float] = None,
+    hw: Optional[HardwareModel] = None,
+) -> dict:
+    """Price ABFT checksum verification against a plan — the costed
+    half of ``verify="auto"`` (core/multiply.py).
+
+    Returns ``{"auto_enabled", "predicted_overhead_s", "overhead_frac",
+    "budget"}``: verification is auto-enabled when the predicted
+    checksum overhead (``cost_model.verify_overhead_s``) fits within
+    ``budget`` (default ``DEFAULT_VERIFY_BUDGET``) of the plan's
+    predicted multiply time.  A trivial (empty-product) plan reports
+    infinite relative overhead — there is nothing worth verifying.
+    """
+    if budget is None:
+        budget = DEFAULT_VERIFY_BUDGET
+    budget = float(budget)
+    if hw is None:
+        from .calibrate import get_hardware_model
+
+        hw = get_hardware_model()
+    bm, _, bn = (int(x) for x in blocks)
+    overhead = verify_overhead_s(hw, int(m), int(k), int(n), bm, bn,
+                                 int(itemsize))
+    base = 0.0 if plan is None else float(plan.predicted_s)
+    if plan is not None and plan.trivial:
+        frac = math.inf
+    else:
+        frac = overhead / base if base > 0.0 else math.inf
+    return {
+        "auto_enabled": bool(frac <= budget),
+        "predicted_overhead_s": float(overhead),
+        "overhead_frac": float(frac),
+        "budget": budget,
+    }
 
 
 def plan_cache_info():

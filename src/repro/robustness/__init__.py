@@ -1,0 +1,30 @@
+"""Robustness subsystem: algorithm-based fault tolerance (ABFT) and
+chaos engineering for the multiply stack.
+
+Long-running electronic-structure campaigns multiply their outputs
+back into themselves for dozens of iterations (the McWeeny
+purification workload), so a single silently corrupted block poisons
+everything downstream.  At service scale (serve/multiply_service.py)
+soft errors, kernel miscompiles and poison requests are operating
+conditions.  This package is the defense layer:
+
+  * ``abft``   — Huang–Abraham-style block checksums: verify a product
+                 per block from independently computed checksum rows /
+                 columns, localize corrupted blocks, and repair them by
+                 a one-shot recompute-and-splice.  Exposed as
+                 ``verify=`` on ``distributed_matmul`` /
+                 ``dbcsr.multiply``.
+  * ``guards`` — cheap jitted NaN/Inf tripwires and structural input
+                 validation raising a typed ``DbcsrValidationError``
+                 taxonomy (instead of shape explosions deep in jit).
+  * ``chaos``  — deterministic seeded fault injection (bit-flips, NaN,
+                 scale/zero corruption, transient dispatch failures)
+                 driving the chaos test battery and the CI chaos gate
+                 (``python -m repro.robustness.chaos --report``).
+
+The serving layer (serve/multiply_service.py) builds its retry /
+degradation ladder on top of these pieces.
+"""
+from . import abft, chaos, guards  # noqa: F401
+
+__all__ = ["abft", "chaos", "guards"]

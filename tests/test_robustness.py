@@ -1,0 +1,505 @@
+"""Robustness battery: ABFT checksums, fault injection, guards, and the
+degrading/retrying multiply service.
+
+Single-device tests run inline on the default 1-device backend (the
+conftest contract); the 2x2-mesh chaos matrix runs in a subprocess with
+its own XLA_FLAGS, mirroring tests/test_batched.py's battery pattern.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from conftest import run_subprocess_devices
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.compat import make_mesh  # noqa: E402
+from repro.core import dbcsr  # noqa: E402
+from repro.robustness import abft, chaos, guards  # noqa: E402
+
+EXEC_KW = dict(densify=False, local_kernel="ref", pipeline_depth=1)
+
+
+def _mesh11():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def _operand(rng, m, n, *, block=32, fill=1.0, mesh=None):
+    data = rng.randn(m, n).astype(np.float32)
+    mask = None
+    if fill < 1.0:
+        mask = rng.rand(m // block, n // block) < fill
+        mask[0, 0] = True
+    return dbcsr.create(data, mesh=mesh, block_size=block, block_mask=mask)
+
+
+# ---------------------------------------------------------------------------
+# abft: checksum residuals, tolerances, detection, repair
+# ---------------------------------------------------------------------------
+
+def test_checksum_residuals_clean_below_tolerance(rng):
+    a = rng.randn(96, 64).astype(np.float32)
+    b = rng.randn(64, 96).astype(np.float32)
+    c = a @ b
+    rep = abft.verify_product(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c),
+                              block_m=32, block_k=32, block_n=32)
+    assert not rep.detected
+    assert rep.flagged_blocks == ()
+    # residuals are small but tolerances must dominate them
+    assert (rep.row_residual <= rep.row_tol).all()
+    assert (rep.col_residual <= rep.col_tol).all()
+
+
+@pytest.mark.parametrize("mode", chaos.FAULT_MODES)
+def test_verify_product_detects_and_localizes(rng, mode):
+    a = rng.randn(96, 64).astype(np.float32)
+    b = rng.randn(64, 128).astype(np.float32)
+    c = a @ b
+    inj = chaos.FaultInjector(seed=3)
+    bad = inj.corrupt_block(jnp.asarray(c), 2, 1, block_m=32, block_n=32,
+                            mode=mode)
+    rep = abft.verify_product(jnp.asarray(a), jnp.asarray(b), bad,
+                              block_m=32, block_k=32, block_n=32)
+    assert rep.detected
+    assert rep.flagged_blocks == ((2, 1),)
+
+
+def test_verify_product_detects_nan_corruption(rng):
+    # NaN residuals must trip detection, never sneak under a tolerance
+    a = rng.randn(64, 64).astype(np.float32)
+    b = rng.randn(64, 64).astype(np.float32)
+    c = (a @ b).copy()
+    c[5, 40] = np.nan
+    rep = abft.verify_product(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c),
+                              block_m=32, block_k=32, block_n=32)
+    assert rep.detected
+    assert (0, 1) in rep.flagged_blocks
+
+
+def test_splice_blocks_repairs_exactly(rng):
+    c = jnp.asarray(rng.randn(96, 96).astype(np.float32))
+    fresh = jnp.asarray(rng.randn(96, 96).astype(np.float32))
+    out = np.asarray(abft.splice_blocks(c, fresh, [(1, 2)], 32, 32))
+    ref = np.asarray(c).copy()
+    ref[32:64, 64:96] = np.asarray(fresh)[32:64, 64:96]
+    assert (out == ref).all()
+
+
+def test_verify_and_repair_raises_on_persistent_corruption(rng):
+    a = jnp.asarray(rng.randn(64, 64).astype(np.float32))
+    b = jnp.asarray(rng.randn(64, 64).astype(np.float32))
+    bad = chaos.corrupt_block(a @ b, 0, 0, block_m=32, block_n=32,
+                              mode="nan", rng=np.random.RandomState(0))
+
+    with pytest.raises(guards.CorruptionDetectedError) as ei:
+        abft.verify_and_repair(a, b, bad, recompute=lambda: bad,
+                               block_m=32, block_k=32, block_n=32)
+    assert ei.value.report.detected
+    assert ei.value.report.repair_attempted and not ei.value.report.repaired
+
+
+# ---------------------------------------------------------------------------
+# multiply-level: verify= end-to-end on a 1x1 mesh
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm", ["cannon", "summa"])
+@pytest.mark.parametrize("fill", [1.0, 0.05])
+def test_multiply_verify_detect_localize_repair(rng, algorithm, fill):
+    mesh = _mesh11()
+    a = _operand(rng, 128, 128, fill=fill, mesh=mesh)
+    b = _operand(rng, 128, 128, fill=fill, mesh=mesh)
+    kw = dict(mesh=mesh, algorithm=algorithm, **EXEC_KW)
+
+    clean = dbcsr.multiply(a, b, **kw)
+    # verify=None must be bit-identical to the pre-existing behaviour
+    # and attach no verification payload
+    assert clean.verification is None
+
+    # clean verified run: no false positive, bit-identical result
+    cv = dbcsr.multiply(a, b, verify="checksum", **kw)
+    assert cv.verification["enabled"]
+    assert not cv.verification["report"].detected
+    assert (np.asarray(cv.data) == np.asarray(clean.data)).all()
+
+    # corrupt the max-norm block of the result; detect, localize
+    # exactly, repair to the bitwise-clean product
+    from repro.sparsity.norms import compute_block_norms
+    norms = compute_block_norms(clean.data, 32, 32)
+    i0, j0 = np.unravel_index(int(np.argmax(norms)), norms.shape)
+    inj = chaos.FaultInjector(seed=7)
+    hook = inj.one_shot_result_hook(int(i0), int(j0), block_m=32,
+                                    block_n=32, mode="bitflip")
+    with chaos.result_corruption(hook):
+        cr = dbcsr.multiply(a, b, verify="checksum", **kw)
+    rep = cr.verification["report"]
+    assert rep.detected
+    assert rep.flagged_blocks == ((int(i0), int(j0)),)
+    assert rep.repaired and rep.n_recomputed_blocks >= 1
+    assert (np.asarray(cr.data) == np.asarray(clean.data)).all()
+
+
+def test_multiply_verify_no_false_positive_with_eps_filter(rng):
+    # eps-filtered triples shift the result away from the unfiltered
+    # product; the dropped-mass term in the tolerance must absorb that
+    mesh = _mesh11()
+    a = _operand(rng, 128, 128, fill=0.3, mesh=mesh)
+    b = _operand(rng, 128, 128, fill=0.3, mesh=mesh)
+    for eps in (1e-3, 1e-1, 5.0):
+        c = dbcsr.multiply(a, b, mesh=mesh, filter_eps=eps,
+                           verify="checksum", **EXEC_KW)
+        if c.verification["enabled"]:
+            assert not c.verification["report"].detected, f"eps={eps}"
+
+
+def test_purification_iterated_multiplies_no_false_positive():
+    # iterated multiplies (density-matrix purification) accumulate
+    # float error; the norm-aware tolerance must not flag clean runs
+    from repro.sparsity import banded_hamiltonian, initial_density
+    from repro.sparsity.workloads import mcweeny_purify
+
+    mesh = _mesh11()
+    H, mask = banded_hamiltonian(128, 32, seed=0)
+    P0 = initial_density(H, mu=0.0)
+    P = dbcsr.create(P0.astype(np.float32), mesh=mesh, block_size=32,
+                     block_mask=mask)
+    _, trace = mcweeny_purify(
+        P, mesh=mesh, n_iter=4, filter_eps=1e-5,
+        multiply_kw=dict(verify="checksum", **EXEC_KW))
+    assert len(trace) == 4  # no CorruptionDetectedError raised
+
+
+def test_multiply_verify_invalid_mode(rng):
+    mesh = _mesh11()
+    a = _operand(rng, 64, 64, mesh=mesh)
+    with pytest.raises(ValueError, match="verify"):
+        dbcsr.multiply(a, a, mesh=mesh, verify="paranoid", **EXEC_KW)
+
+
+def test_batched_verify_forces_looped_and_rejects_pinned_fused(rng):
+    mesh = _mesh11()
+    pairs = [(_operand(rng, 64, 64, mesh=mesh),
+              _operand(rng, 64, 64, mesh=mesh)) for _ in range(3)]
+    results, report = dbcsr.multiply_batched(
+        pairs, mesh=mesh, verify="checksum", return_plan=True, **EXEC_KW)
+    assert all(not b["fused"] for b in report["buckets"])
+    for (a, b), c in zip(pairs, results):
+        ref = dbcsr.multiply(a, b, mesh=mesh, **EXEC_KW)
+        assert (np.asarray(c.data) == np.asarray(ref.data)).all()
+        assert not c.verification["report"].detected
+    with pytest.raises(ValueError, match="fused"):
+        dbcsr.multiply_batched(pairs, mesh=mesh, verify="checksum",
+                               fused=True, **EXEC_KW)
+
+
+# ---------------------------------------------------------------------------
+# planner: verify="auto" is a costed decision
+# ---------------------------------------------------------------------------
+
+def test_decide_verify_budget():
+    from repro.planner.calibrate import get_hardware_model
+    from repro.planner.plan import decide_verify, plan_multiply
+
+    hw = get_hardware_model()
+    # large square problem: checksum flops are O(1/nblocks) of the
+    # multiply -> enabled under the default budget
+    big = plan_multiply(2048, 2048, 2048, blocks=(64, 64, 64), hw=hw)
+    d_big = decide_verify(big, 2048, 2048, 2048, blocks=(64, 64, 64), hw=hw)
+    assert d_big["auto_enabled"]
+    assert d_big["overhead_frac"] <= d_big["budget"]
+    # tiny problem: fixed latencies dominate -> declined
+    small = plan_multiply(64, 64, 64, blocks=(32, 32, 32), hw=hw)
+    d_small = decide_verify(small, 64, 64, 64, blocks=(32, 32, 32), hw=hw)
+    assert not d_small["auto_enabled"]
+    # a zero budget declines everything
+    d_zero = decide_verify(big, 2048, 2048, 2048, blocks=(64, 64, 64),
+                           budget=0.0, hw=hw)
+    assert not d_zero["auto_enabled"]
+
+
+def test_multiply_verify_auto_prices_overhead(rng):
+    mesh = _mesh11()
+    a = _operand(rng, 64, 64, mesh=mesh)
+    c = dbcsr.multiply(a, a, mesh=mesh, verify="auto", **EXEC_KW)
+    info = c.verification
+    assert info["mode"] == "auto"
+    assert "overhead_frac" in info and "predicted_overhead_s" in info
+    # explicit generous budget forces it on even for a small problem
+    c2 = dbcsr.multiply(a, a, mesh=mesh, verify="auto",
+                        verify_budget=1e9, **EXEC_KW)
+    assert c2.verification["enabled"]
+    assert c2.verification["report"] is not None
+
+
+# ---------------------------------------------------------------------------
+# guards: typed validation taxonomy + tripwires
+# ---------------------------------------------------------------------------
+
+def test_guards_finite_tripwires(rng):
+    x = jnp.asarray(rng.randn(8, 8).astype(np.float32))
+    assert guards.all_finite(x)
+    assert not guards.all_finite(x.at[3, 3].set(jnp.nan))
+    with pytest.raises(guards.NonFiniteOperandError):
+        guards.assert_finite(x.at[0, 0].set(jnp.inf), "A")
+    with pytest.raises(guards.NonFiniteResultError):
+        guards.assert_finite(x.at[0, 0].set(jnp.inf), "C", kind="result")
+    assert guards.all_finite(jnp.arange(4))  # integer dtypes: trivially ok
+
+
+def test_guards_validate_multiply_request(rng):
+    mesh = _mesh11()
+    a = _operand(rng, 64, 64, mesh=mesh)
+    b = _operand(rng, 64, 96, mesh=mesh)
+    guards.validate_multiply_request(a, b)  # clean pair passes
+
+    # inner-dimension mismatch
+    with pytest.raises(guards.ShapeMismatchError):
+        guards.validate_multiply_request(b, b)
+
+    # mask inconsistency: wrong mask shape
+    bad = _operand(rng, 64, 64, mesh=mesh)
+    bad.block_mask = np.ones((3, 3), dtype=bool)
+    with pytest.raises(guards.MaskConsistencyError):
+        guards.validate_multiply_request(bad, b)
+
+    # norm-cache inconsistency: nonzero norm outside the mask
+    nb = _operand(rng, 64, 64, fill=0.5, mesh=mesh)
+    if nb.block_norms is not None and nb.block_mask is not None \
+            and not nb.block_mask.all():
+        norms = np.asarray(nb.block_norms).copy()
+        norms[~nb.block_mask] = 1.0
+        nb.block_norms = norms
+        with pytest.raises(guards.NormConsistencyError):
+            guards.validate_multiply_request(nb, b)
+
+    # taxonomy: every typed error is a DbcsrValidationError is a ValueError
+    for exc in (guards.ShapeMismatchError, guards.GridMismatchError,
+                guards.MaskConsistencyError, guards.NormConsistencyError,
+                guards.NonFiniteOperandError, guards.NonFiniteResultError):
+        assert issubclass(exc, guards.DbcsrValidationError)
+        assert issubclass(exc, ValueError)
+
+
+# ---------------------------------------------------------------------------
+# chaos: deterministic injection
+# ---------------------------------------------------------------------------
+
+def test_fault_injector_deterministic(rng):
+    c = jnp.asarray(rng.randn(64, 64).astype(np.float32))
+    one = chaos.FaultInjector(seed=5).corrupt_block(
+        c, 1, 1, block_m=32, block_n=32, mode="bitflip")
+    two = chaos.FaultInjector(seed=5).corrupt_block(
+        c, 1, 1, block_m=32, block_n=32, mode="bitflip")
+    other = chaos.FaultInjector(seed=6).corrupt_block(
+        c, 1, 1, block_m=32, block_n=32, mode="bitflip")
+    assert (np.asarray(one) == np.asarray(two)).all()
+    assert not (np.asarray(one) == np.asarray(c)).all()
+    assert not (np.asarray(one) == np.asarray(other)).all()
+    # corruption stays inside the target block
+    delta = np.asarray(one) != np.asarray(c)
+    delta[32:64, 32:64] = False
+    assert not delta.any()
+
+
+def test_one_shot_hook_fires_once(rng):
+    c = jnp.asarray(rng.randn(64, 64).astype(np.float32))
+    hook = chaos.FaultInjector(seed=0).one_shot_result_hook(
+        0, 0, block_m=32, block_n=32, mode="nan")
+    first = hook(c)
+    assert np.isnan(np.asarray(first)).any()
+    second = hook(c)  # identity after the first firing
+    assert (np.asarray(second) == np.asarray(c)).all()
+
+
+def test_dispatch_fault_injector():
+    inj = chaos.DispatchFaultInjector(fail_first=2)
+    with pytest.raises(chaos.TransientDispatchError):
+        inj.check(stage="fused", attempt=0)
+    with pytest.raises(chaos.TransientDispatchError):
+        inj.check(stage="fused", attempt=1)
+    inj.check(stage="fused", attempt=2)  # budget exhausted: passes
+    staged = chaos.DispatchFaultInjector(fail_stages=("fused",))
+    with pytest.raises(chaos.TransientDispatchError):
+        staged.check(stage="fused", attempt=0)
+    staged.check(stage="looped", attempt=0)
+
+
+# ---------------------------------------------------------------------------
+# service: retry/degradation ladder, error tickets, ticket taxonomy
+# ---------------------------------------------------------------------------
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _service(mesh, **kw):
+    from repro.serve.multiply_service import MultiplyService
+
+    kw.setdefault("slo_s", 0.0)
+    kw.setdefault("max_batch", 8)
+    kw.setdefault("clock", FakeClock())
+    kw.setdefault("sleep", lambda s: None)
+    return MultiplyService(mesh, **{**EXEC_KW, **kw})
+
+
+def test_service_ticket_taxonomy(rng):
+    from repro.serve.multiply_service import (TicketPendingError,
+                                              UnknownTicketError)
+
+    mesh = _mesh11()
+    svc = _service(mesh)
+    t = svc.submit(_operand(rng, 64, 64, mesh=mesh),
+                   _operand(rng, 64, 64, mesh=mesh))
+    with pytest.raises(TicketPendingError):
+        svc.result(t)          # still queued
+    with pytest.raises(UnknownTicketError):
+        svc.result(t + 100)    # never submitted
+    svc.poll()
+    svc.result(t)
+    with pytest.raises(UnknownTicketError):
+        svc.result(t)          # already retrieved
+    # both are KeyError subclasses (backwards compatibility)
+    assert issubclass(TicketPendingError, KeyError)
+    assert issubclass(UnknownTicketError, KeyError)
+
+
+def test_service_retries_transient_failures(rng):
+    mesh = _mesh11()
+    slept = []
+    svc = _service(mesh, sleep=slept.append, max_retries=2, backoff_s=0.05,
+                   fault_injector=chaos.DispatchFaultInjector(fail_first=2))
+    a, b = _operand(rng, 64, 64, mesh=mesh), _operand(rng, 64, 64, mesh=mesh)
+    ref = dbcsr.multiply(a, b, mesh=mesh, **EXEC_KW)
+    t = svc.submit(a, b)
+    assert svc.poll() == [t]
+    assert (np.asarray(svc.result(t).data) == np.asarray(ref.data)).all()
+    st = svc.stats()
+    assert st["n_retries"] == 2 and st["n_degradations"] == 0
+    assert st["n_error_tickets"] == 0
+    assert slept == [0.05, 0.1]  # exponential backoff
+
+
+def test_service_degrades_to_looped(rng):
+    mesh = _mesh11()
+    svc = _service(mesh, max_retries=1,
+                   fault_injector=chaos.DispatchFaultInjector(
+                       fail_stages=("fused",)))
+    a, b = _operand(rng, 64, 64, mesh=mesh), _operand(rng, 64, 64, mesh=mesh)
+    t = svc.submit(a, b)
+    svc.poll()
+    svc.result(t)
+    st = svc.stats()
+    assert st["n_degradations"] == 1
+    assert st["buckets"][-1]["stage"] == "looped"
+
+
+def test_service_per_request_isolation(rng):
+    # every batched rung fails -> per-request isolation still delivers
+    mesh = _mesh11()
+    svc = _service(mesh, max_retries=0,
+                   fault_injector=chaos.DispatchFaultInjector(
+                       fail_stages=("fused", "looped")))
+    a, b = _operand(rng, 64, 64, mesh=mesh), _operand(rng, 64, 64, mesh=mesh)
+    ref = dbcsr.multiply(a, b, mesh=mesh, **EXEC_KW)
+    t = svc.submit(a, b)
+    done = svc.poll()
+    assert done == [t]  # poll() never loses tickets
+    assert (np.asarray(svc.result(t).data) == np.asarray(ref.data)).all()
+    st = svc.stats()
+    assert st["n_degradations"] == 2
+    assert st["buckets"][-1]["stage"] == "per_request"
+
+
+def test_service_poison_request_quarantined(rng):
+    # ISSUE acceptance: a poison request in a fused batch yields an
+    # error ticket for that request only; every other request's result
+    # is bit-identical to a clean run
+    mesh = _mesh11()
+    svc = _service(mesh)
+    good = [(_operand(rng, 64, 64, mesh=mesh),
+             _operand(rng, 64, 64, mesh=mesh)) for _ in range(3)]
+    bad_a = _operand(rng, 64, 64, mesh=mesh)
+    bad_a.data = bad_a.data.at[0, 0].set(jnp.nan)
+    refs = [dbcsr.multiply(a, b, mesh=mesh, **EXEC_KW) for a, b in good]
+    t_good = [svc.submit(a, b) for a, b in good]
+    t_bad = svc.submit(bad_a, _operand(rng, 64, 64, mesh=mesh))
+    done = svc.poll()
+    assert sorted(done) == sorted(t_good + [t_bad])
+    for t, ref in zip(t_good, refs):
+        assert (np.asarray(svc.result(t).data) == np.asarray(ref.data)).all()
+    with pytest.raises(guards.NonFiniteResultError):
+        svc.result(t_bad)
+    st = svc.stats()
+    assert st["n_error_tickets"] == 1
+    assert st["n_nonfinite_quarantined"] == 1
+    assert st["n_completed"] == 3
+
+
+def test_service_validates_at_submit(rng):
+    mesh = _mesh11()
+    svc = _service(mesh)
+    a = _operand(rng, 64, 64, mesh=mesh)
+    bad = _operand(rng, 64, 64, mesh=mesh)
+    bad.block_mask = np.ones((5, 5), dtype=bool)
+    with pytest.raises(guards.MaskConsistencyError):
+        svc.submit(a, bad)     # rejected synchronously, no ticket burned
+    with pytest.raises(guards.ShapeMismatchError):
+        svc.submit(a, _operand(rng, 96, 64, mesh=mesh))
+    assert svc.stats()["n_requests"] == 0
+    # validation is optional
+    loose = _service(mesh, validate=False)
+    t = loose.submit(a, bad)
+    assert isinstance(t, int)
+
+
+def test_service_verify_forwarded(rng):
+    # verify= flows through the service kw into the looped multiply
+    mesh = _mesh11()
+    svc = _service(mesh, verify="checksum")
+    a, b = _operand(rng, 64, 64, mesh=mesh), _operand(rng, 64, 64, mesh=mesh)
+    t = svc.submit(a, b)
+    svc.poll()
+    c = svc.result(t)
+    assert c.verification is not None
+    assert not c.verification["report"].detected
+
+
+# ---------------------------------------------------------------------------
+# 2x2 mesh battery: chaos matrix in a subprocess
+# ---------------------------------------------------------------------------
+
+BATTERY = r"""
+import json
+from repro.compat import make_mesh
+from repro.robustness.chaos import run_injection_matrix
+
+mesh = make_mesh((2, 2), ("data", "model"))
+rows = run_injection_matrix(mesh, "2x2", algorithms=("cannon", "summa"),
+                            fills=(1.0, 0.05), modes=("bitflip", "nan"),
+                            geometry=(128, 128, 128), block=32, seed=0)
+out = {
+    "n_rows": len(rows),
+    "inject_ok": all(r["ok"] for r in rows if r["mode"] not in
+                     ("clean", "clean_eps")),
+    "clean_ok": all(not r["detected"] for r in rows if r["mode"] in
+                    ("clean", "clean_eps")),
+    "all_localized": all(r["localized_exact"] for r in rows
+                         if r["mode"] not in ("clean", "clean_eps")),
+}
+print("JSON" + json.dumps(out))
+"""
+
+
+def test_chaos_matrix_2x2_mesh():
+    stdout = run_subprocess_devices(BATTERY, n_devices=4, timeout=900)
+    line = [l for l in stdout.splitlines() if l.startswith("JSON")][-1]
+    out = json.loads(line[4:])
+    assert out["n_rows"] > 0
+    assert out["inject_ok"], stdout
+    assert out["clean_ok"], stdout
+    assert out["all_localized"], stdout
