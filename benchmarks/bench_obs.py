@@ -1,0 +1,234 @@
+"""Telemetry layer: tracing overhead + trace-schema + scoreboard gates.
+
+The observability contract (repro.obs) has three measurable halves,
+and this bench gates all of them in CI:
+
+  overhead    a TRACED multiply (spans, per-step timeline, plan-outcome
+              logging) vs the identical untraced one on the pinned
+              deterministic config — tracing must cost <= 5% (or fall
+              inside an absolute jitter floor; the disabled-by-default
+              path is separately bitwise-gated in tests/test_obs.py)
+  trace       the Chrome-trace JSON exported for one traced
+              ``dbcsr.multiply(return_plan=True)`` must pass
+              ``validate_chrome_trace`` (schema, nesting, finite
+              timestamps), and the synthetic schedule-step spans must
+              sum consistently with the measured dispatch wall time
+  scoreboard  a pinned algorithm sweep must leave one
+              predicted-vs-actual row per executed algorithm, each
+              with a finite signed relative error — the input
+              ``planner.calibrate --check-drift`` consumes
+
+    PYTHONPATH=src python -m benchmarks.bench_obs [--smoke] [--check]
+
+``--smoke`` shrinks geometry/reps and writes
+artifacts/bench/obs_smoke.json (scripts/ci.sh runs it with --check);
+the full run writes artifacts/bench/obs.json.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=1")
+
+import argparse
+import json
+import time
+
+import numpy as np
+import jax
+
+from repro import obs
+from repro.compat import make_mesh
+from repro.core import dbcsr
+
+# pinned deterministic config: traced-vs-untraced is the IDENTICAL
+# execution path, so the delta is pure telemetry cost
+EXEC_KW = dict(algorithm="cannon", densify=False, local_kernel="ref",
+               pipeline_depth=1)
+
+OVERHEAD_GATE = 0.05          # traced <= 5% over untraced ...
+OVERHEAD_ABS_FLOOR_S = 2e-3   # ... or within the host-timing jitter floor
+STEP_SUM_TOL = 0.05           # children-vs-dispatch duration agreement
+SWEEP_ALGOS = ("cannon", "summa", "ts_k")
+
+
+def bench_overhead(mesh, geometry, block, reps, rng):
+    """Interleaved best-of-``reps`` traced vs untraced wall time.
+
+    Eager shard_map dispatch on the host backend has run-to-run jitter
+    far above the telemetry cost, so the two paths are timed in
+    ALTERNATION (machine-state drift hits both equally) and the gate
+    allows the delta to fall inside the baseline's own observed spread
+    — the untraced path disagreeing with itself by more than the
+    traced-vs-untraced delta means no measurable overhead.
+    """
+    m, k, n = geometry
+    a = dbcsr.create(rng.randn(m, k).astype(np.float32), mesh=mesh,
+                     block_size=block)
+    b = dbcsr.create(rng.randn(k, n).astype(np.float32), mesh=mesh,
+                     block_size=block)
+    kw = dict(mesh=mesh, **EXEC_KW)
+
+    def run_once():
+        c = dbcsr.multiply(a, b, **kw)
+        jax.block_until_ready(c.data)
+
+    def timed():
+        t0 = time.perf_counter()
+        run_once()
+        return time.perf_counter() - t0
+
+    obs.disable()
+    run_once()                      # compile before timing either path
+    plain, traced = [], []
+    for _ in range(reps):
+        obs.disable()
+        plain.append(timed())
+        obs.enable()                # in-memory tracer, no log files
+        traced.append(timed())
+    obs.disable()
+
+    t_plain, t_traced = min(plain), min(traced)
+    jitter = max(plain) - min(plain)
+    overhead = (t_traced - t_plain) / t_plain
+    ok = (overhead <= OVERHEAD_GATE
+          or (t_traced - t_plain) <= max(OVERHEAD_ABS_FLOOR_S, jitter))
+    row = {
+        "geometry": list(geometry), "block": block, "reps": reps,
+        "untraced_s": t_plain, "traced_s": t_traced,
+        "untraced_all_s": plain, "traced_all_s": traced,
+        "overhead_frac": overhead, "gate": OVERHEAD_GATE,
+        "abs_floor_s": OVERHEAD_ABS_FLOOR_S, "jitter_s": jitter, "ok": ok,
+    }
+    print(f"overhead: {m}x{k}x{n} block {block}  "
+          f"untraced {t_plain*1e3:8.2f} ms  traced {t_traced*1e3:8.2f} ms  "
+          f"{overhead*100:+5.1f}%  (gate {OVERHEAD_GATE*100:.0f}% or "
+          f"jitter floor {max(OVERHEAD_ABS_FLOOR_S, jitter)*1e3:.1f} ms)")
+    return row
+
+
+def bench_trace_schema(mesh, geometry, block, rng, out_dir):
+    """One traced multiply -> valid Chrome trace + consistent durations."""
+    m, k, n = geometry
+    a = dbcsr.create(rng.randn(m, k).astype(np.float32), mesh=mesh,
+                     block_size=block)
+    b = dbcsr.create(rng.randn(k, n).astype(np.float32), mesh=mesh,
+                     block_size=block)
+    obs.enable()
+    c, plan = dbcsr.multiply(a, b, mesh=mesh, return_plan=True, **EXEC_KW)
+    jax.block_until_ready(c.data)
+    obs.disable()
+    spans = obs.last_trace()
+
+    trace_path = os.path.join(out_dir, "obs_multiply_trace.json")
+    chrome = obs.to_chrome_trace(spans)
+    obs.write_chrome_trace(trace_path, spans)
+    errors = obs.validate_chrome_trace(chrome)
+
+    by_id = {s.span_id: s for s in spans}
+    roots = [s for s in spans if s.parent_id is None]
+    dispatches = [s for s in spans if s.name == "dispatch"]
+    consistency = {"n_spans": len(spans), "n_roots": len(roots),
+                   "n_dispatch": len(dispatches)}
+    durations_ok = len(roots) == 1 and len(dispatches) == 1
+    if durations_ok:
+        root, disp = roots[0], dispatches[0]
+        kids = [s for s in spans if s.parent_id == disp.span_id]
+        kid_sum = sum(s.dur for s in kids)
+        rel_gap = (abs(kid_sum - disp.dur) / disp.dur
+                   if disp.dur > 0 else float("inf"))
+        durations_ok = (bool(kids) and rel_gap <= STEP_SUM_TOL
+                        and root.dur >= disp.dur > 0)
+        consistency.update({
+            "root_s": root.dur, "dispatch_s": disp.dur,
+            "step_children": len(kids), "children_sum_s": kid_sum,
+            "rel_gap": rel_gap, "tol": STEP_SUM_TOL,
+        })
+    row = {"trace_path": trace_path, "schema_errors": errors,
+           "consistency": consistency, "durations_ok": durations_ok}
+    print(f"trace:    {len(spans)} spans -> {trace_path}  "
+          f"schema errors: {len(errors)}  "
+          f"step-sum gap: {consistency.get('rel_gap', float('nan'))*100:.1f}% "
+          f"(tol {STEP_SUM_TOL*100:.0f}%)")
+    return row
+
+
+def bench_scoreboard(mesh, geometry, block, rng, log_dir):
+    """Pinned algorithm sweep -> one scoreboard row per algorithm."""
+    m, k, n = geometry
+    a = dbcsr.create(rng.randn(m, k).astype(np.float32), mesh=mesh,
+                     block_size=block)
+    b = dbcsr.create(rng.randn(k, n).astype(np.float32), mesh=mesh,
+                     block_size=block)
+    obs.clear_plan_outcomes()
+    obs.enable(log_dir=log_dir)
+    for algo in SWEEP_ALGOS:
+        kw = dict(EXEC_KW, algorithm=algo)
+        c = dbcsr.multiply(a, b, mesh=mesh, **kw)
+        jax.block_until_ready(c.data)
+    obs.disable()
+    outcomes = obs.plan_outcomes()
+    sb = obs.planner_scoreboard(outcomes)
+    print(obs.render_scoreboard(sb))
+    complete = all(
+        algo in sb and sb[algo]["n"] >= 1
+        and np.isfinite(sb[algo]["rel_err_median"])
+        for algo in SWEEP_ALGOS)
+    return {"algorithms": list(SWEEP_ALGOS), "n_outcomes": len(outcomes),
+            "scoreboard": sb, "complete": complete,
+            "plan_log": os.path.join(log_dir, obs.PLAN_OUTCOMES_LOG)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small geometry, few reps -> obs_smoke.json")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless tracing overhead <= 5%, the "
+                         "Chrome trace validates with consistent "
+                         "durations, and the sweep scoreboard has a "
+                         "finite predicted-vs-actual row per algorithm "
+                         "(CI gate)")
+    ap.add_argument("--out", default="artifacts/bench")
+    ap.add_argument("--obs-dir", default="artifacts/obs",
+                    help="log dir for the sweep's plan_outcomes.jsonl "
+                         "(what calibrate --check-drift reads)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        geometry, block, reps = (256, 256, 256), 32, 3
+    else:
+        geometry, block, reps = (512, 512, 512), 32, 5
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    rng = np.random.RandomState(0)
+    os.makedirs(args.out, exist_ok=True)
+    os.makedirs(args.obs_dir, exist_ok=True)
+
+    overhead = bench_overhead(mesh, geometry, block, reps, rng)
+    trace = bench_trace_schema(mesh, geometry, block, rng, args.out)
+    scoreboard = bench_scoreboard(mesh, geometry, block, rng, args.obs_dir)
+
+    gates = {
+        "overhead_ok": bool(overhead["ok"]),
+        "trace_valid": not trace["schema_errors"],
+        "durations_consistent": bool(trace["durations_ok"]),
+        "scoreboard_complete": bool(scoreboard["complete"]),
+    }
+    result = {
+        "exec_kw": {k: str(v) for k, v in EXEC_KW.items()},
+        "overhead": overhead,
+        "trace": trace,
+        "scoreboard": scoreboard,
+        "gates": gates,
+    }
+    name = "obs_smoke.json" if args.smoke else "obs.json"
+    path = os.path.join(args.out, name)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    print("gates:", gates)
+    print("wrote ->", path)
+    if args.check and not all(gates.values()):
+        raise SystemExit(f"telemetry gate failed: "
+                         f"{[k for k, v in gates.items() if not v]}")
+
+
+if __name__ == "__main__":
+    main()

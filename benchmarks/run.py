@@ -25,6 +25,8 @@ BENCHES = [
      "benchmarks.bench_batched"),
     ("ABFT verified multiply (checksum overhead + chaos gate)",
      "benchmarks.bench_abft"),
+    ("telemetry (tracing overhead + trace schema + planner scoreboard)",
+     "benchmarks.bench_obs"),
     ("IV-C DBCSR vs PDGEMM(SUMMA)", "benchmarks.bench_vs_pgemm"),
     ("2.5D Cannon (pod-axis, beyond-paper)", "benchmarks.bench_25d"),
     ("roofline summary (from dry-run artifacts)", "benchmarks.bench_roofline"),

@@ -17,6 +17,7 @@ import numpy as np
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.core.blocking import GridSpec
 from repro.core.multiply import distributed_matmul
 from repro.core.tall_skinny import classify_shape
@@ -59,23 +60,20 @@ def main():
     #     cannon25d+densified     -         -           -           -
     #                           infeasible: no replication axis
     print(plan_multiply(n, n, n, mesh_shape=(4, 4)).explain())
-    # the executed plan also carries the schedule engine's per-step
-    # comm/compute split (core/schedule.py: pipeline_depth=2 overlaps
-    # step t+1's transfer with step t's multiply)
+    # one TRACED run: the telemetry layer (repro.obs) turns the same
+    # schedule metadata into a span timeline + Chrome trace instead of
+    # a raw stats dump (open artifacts/obs/multiply_trace.json in
+    # ui.perfetto.dev or chrome://tracing)
+    obs.enable(log_dir="artifacts/obs")
     _, xplan = distributed_matmul(Ad, Bd, mesh=mesh, grid=grid,
                                   return_plan=True)
-    ss = xplan.schedule_stats
-    print(f"  schedule: {ss['algorithm']} x {ss['n_steps']} steps "
-          f"(depth {ss['pipeline_depth']}, comm op: {ss['comm_op']})")
-    for st in ss["steps"]:
-        tag = "skip" if st["skipped"] else "    "
-        print(f"    step {st['step']:2d} {tag} "
-              f"comm {st['comm_s'] * 1e3:7.3f} ms "
-              f"({st['comm_bytes'] / 1e6:6.2f} MB)  "
-              f"compute {st['compute_s'] * 1e3:7.3f} ms")
-    print(f"    totals: comm {ss['comm_s'] * 1e3:.3f} ms, compute "
-          f"{ss['compute_s'] * 1e3:.3f} ms, overlappable bound "
-          f"{ss['overlap_bound_s'] * 1e3:.3f} ms")
+    trace = obs.last_trace()
+    obs.write_chrome_trace("artifacts/obs/multiply_trace.json", trace)
+    print("  trace timeline (spans; full trace -> "
+          "artifacts/obs/multiply_trace.json):")
+    print(obs.render_timeline(trace))
+    print(obs.render_breakdown(trace))
+    obs.disable()  # timed comparisons below run with zero overhead
     c1, t_auto = timed("auto (planner)", jax.jit(
         lambda a, b: distributed_matmul(a, b, mesh=mesh, grid=grid)), Ad, Bd)
     c2, t_summa = timed("SUMMA (PDGEMM baseline)", jax.jit(
@@ -102,6 +100,16 @@ def main():
                                         algorithm="summa")), A2s, B2s)
     print(f"  speedup vs PDGEMM: {t_sm/t_ts:.2f}x  "
           "(paper reports up to 2.5x on this shape)")
+
+    # traced tall-skinny run: every traced multiply also logs the
+    # planner's predicted cost next to the measured dispatch time
+    # (artifacts/obs/plan_outcomes.jsonl — the input to
+    #  `python -m repro.planner.calibrate --check-drift`)
+    obs.enable(log_dir="artifacts/obs", reset=False)
+    distributed_matmul(A2d, B2d, mesh=mesh, grid=grid)
+    obs.disable()
+    print("== planner scoreboard (predicted vs measured) ==")
+    print(obs.render_scoreboard(obs.planner_scoreboard(obs.plan_outcomes())))
 
 
 if __name__ == "__main__":

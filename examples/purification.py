@@ -30,6 +30,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.compat import make_mesh
 from repro.core import dbcsr
 from repro.core.blocking import GridSpec
@@ -57,12 +58,17 @@ def main():
           f"tr(P0) = {float(P0.trace()):.2f} (electrons: {n // 2})")
 
     t0 = time.time()
+    # traced run: every multiply leaves a span tree, and the workload
+    # publishes per-iteration occupancy into the metrics registry —
+    # the gauge's sample history IS the decay curve
+    obs.enable(log_dir="artifacts/obs")
     P, trace = mcweeny_purify(
         P0, mesh=mesh, n_iter=N_ITER, filter_eps=FILTER_EPS,
         # blocked path + jnp reference kernel: the stack executor runs
         # the eps-filtered plans (interpret-mode Pallas is the same
         # math, just slower on this host container)
         multiply_kw=dict(densify=False, local_kernel="ref"))
+    obs.disable()
     dt = time.time() - t0
 
     print(f"{'iter':>4s} {'occupancy':>10s} {'blocks':>7s} "
@@ -85,6 +91,12 @@ def main():
           f"({occs[peak]:.4f}), converges to {occs[-1]:.4f}")
     print(f"monotone decay after the peak: {monotone}   "
           f"net sparsification vs initial guess: {decayed}")
+    samples = obs.gauge("purification.occupancy").samples
+    bars = " ".join(f"{s:.3f}" for s in samples)
+    print(f"occupancy decay as telemetry gauge samples "
+          f"(obs.gauge('purification.occupancy'), {len(samples)} pts):")
+    print(f"  {bars}")
+    assert samples == occs, "gauge samples should mirror the trace"
     assert monotone and decayed, \
         "purification occupancy did not decay monotonically after the peak"
     assert abs(trace[-1]["trace_P"] - n // 2) < 0.5, "electron count drifted"

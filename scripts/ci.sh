@@ -60,3 +60,17 @@ python benchmarks/bench_abft.py --smoke --check
 # (artifacts/bench/chaos_smoke.json) — nonzero exit unless every cell
 # passes
 PYTHONPATH=src python -m repro.robustness.chaos --report
+
+# telemetry (repro.obs): tracing-on overhead <= 5% (or inside the
+# baseline's own jitter spread), exported Chrome trace validates with
+# span durations consistent against the measured dispatch wall time,
+# and the pinned algorithm sweep leaves a finite predicted-vs-actual
+# scoreboard row per algorithm (artifacts/bench/obs_smoke.json)
+python benchmarks/bench_obs.py --smoke --check
+
+# planner drift: compare the sweep's predicted-vs-measured log
+# (artifacts/obs/plan_outcomes.jsonl, written by bench_obs) against the
+# calibration — advisory here (no --strict): interpret-mode hosts run
+# far from the calibrated model, so the scoreboard is printed for the
+# trajectory rather than gated
+python -m repro.planner.calibrate --check-drift || true

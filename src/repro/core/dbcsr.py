@@ -23,6 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
+
 from .blocking import BlockLayout, GridSpec
 
 __all__ = ["DBCSRMatrix", "create", "multiply", "multiply_batched",
@@ -576,6 +578,11 @@ def multiply_batched(
             verify=verify, **kw)
         for i, c in zip(idxs, out):
             results[i] = c
+        if obs.enabled():
+            # fuse-or-loop decision accounting (planner or pinned)
+            obs.counter("batched.requests_fused" if rep["fused"]
+                        else "batched.requests_looped").inc(len(idxs))
+            obs.counter("batched.buckets").inc()
         bucket_reports.append({
             "key": key, "n_requests": len(idxs), "request_indices": idxs,
             **rep})

@@ -67,6 +67,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 from .blocking import BlockLayout
 from .densify import from_blocks, to_blocks
 from .stacks import StackPlan, build_stacks, pad_plans, STACK_SIZE
@@ -229,6 +231,16 @@ class ExecutorPlan:
             s["norm_retained_fraction"] = (
                 self.n_entries / self.n_unfiltered_entries
                 if self.n_unfiltered_entries else 1.0)
+        if obs.enabled():
+            # publish into the process-wide registry (gated: the
+            # disabled path must add zero registry entries)
+            obs.counter("executor.stats_reports").inc()
+            obs.counter("executor.entries").inc(self.n_entries)
+            obs.counter("executor.padding_triples_saved").inc(
+                s["padding_triples_saved"])
+            obs.counter("executor.norm_filtered_triples").inc(
+                self.n_norm_filtered_triples)
+            obs.histogram("executor.occupancy").observe(self.occupancy)
         return s
 
 
@@ -593,7 +605,7 @@ class BatchedExecutorPlan:
                 "n_stacks": p.n_stacks,
                 "occupancy": p.occupancy,
             })
-        return {
+        s = {
             "n_groups": self.n_groups,
             "n_shared_plans": self.n_shared_plans,
             "n_entries": self.n_entries,
@@ -605,6 +617,13 @@ class BatchedExecutorPlan:
             "filter_eps": self.filter_eps,
             "per_group": per_group,
         }
+        if obs.enabled():
+            obs.counter("executor.batched_stats_reports").inc()
+            obs.counter("executor.batched_shared_plans").inc(
+                self.n_shared_plans)
+            obs.histogram("executor.batched_padding_frac").observe(
+                self.padding_frac)
+        return s
 
 
 def build_batched_executor_plan(

@@ -37,11 +37,14 @@ is already correct.
 """
 from __future__ import annotations
 
+import time
 from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
 
 from .blocking import GridSpec
 from .cannon import (build_cannon_schedule, cannon_matmul, cannon_step_masks,
@@ -227,29 +230,37 @@ def _build_meta_schedule(algorithm: str, *, grid, mesh, local_shape,
 
 def _schedule_stats(algorithm: str, *, grid, mesh, local_shape, itemsize,
                     lm, densify: bool, pipeline_depth: int,
-                    reduce_kw: dict) -> dict:
+                    reduce_kw: dict, n_groups: int = 1) -> dict:
     """Per-step comm-vs-compute split of the executed schedule, priced
     with the calibrated hardware constants (host-side observability —
-    attached to executed plans as ``schedule_stats``)."""
+    attached to executed plans as ``schedule_stats`` and emitted as
+    schedule-step spans by the telemetry layer).  ``n_groups`` scales
+    comm bytes and dense flops for the fused batched dispatch, whose
+    every step moves/computes G same-geometry products at once."""
     from repro.planner.calibrate import get_hardware_model
 
     hw = get_hardware_model()
     empty = getattr(lm, "empty_steps", frozenset())
     sched = _build_meta_schedule(
         algorithm, grid=grid, mesh=mesh, local_shape=local_shape,
-        itemsize=itemsize, empty_steps=empty, reduce_kw=reduce_kw)
+        itemsize=itemsize * n_groups, empty_steps=empty,
+        reduce_kw=reduce_kw)
     meta = schedule_step_meta(sched)
 
     ml, kl, nl = local_shape
-    dense_flops = 2.0 * ml * kl * nl
+    dense_flops = 2.0 * ml * kl * nl * n_groups
     step_execs = getattr(lm, "step_executors", None)
     steps = []
     for t in range(meta["n_steps"]):
         comm_bytes = meta["step_comm_bytes"][t]
         plan = None
         if not densify and t not in empty:
-            plan = (step_execs[t].executor_plan if step_execs is not None
-                    else getattr(lm, "executor_plan", None))
+            # stepwise executors carry .executor_plan (blocked path) or
+            # .batched_plan (fused batched path); both expose
+            # n_entries/block_* — enough to price the stack dispatch
+            ex = step_execs[t] if step_execs is not None else lm
+            plan = (getattr(ex, "executor_plan", None)
+                    or getattr(ex, "batched_plan", None))
         if t in empty:
             flops = 0.0
             compute_s = 0.0
@@ -261,6 +272,7 @@ def _schedule_stats(algorithm: str, *, grid, mesh, local_shape, itemsize,
         else:
             flops = dense_flops
             compute_s = flops / hw.flops_per_s
+        n_dense = getattr(plan, "n_dense_triples", None)
         steps.append({
             "step": t,
             "skipped": t in empty,
@@ -268,6 +280,9 @@ def _schedule_stats(algorithm: str, *, grid, mesh, local_shape, itemsize,
             "comm_s": comm_bytes / hw.bytes_per_s,
             "flops": flops,
             "compute_s": compute_s,
+            "n_entries": None if plan is None else int(plan.n_entries),
+            "occupancy": (plan.n_entries / n_dense
+                          if plan is not None and n_dense else None),
         })
     comm_s = sum(s["comm_s"] for s in steps)
     compute_s = sum(s["compute_s"] for s in steps)
@@ -290,9 +305,63 @@ def _schedule_stats(algorithm: str, *, grid, mesh, local_shape, itemsize,
     }
 
 
+def _emit_step_spans(parent, t0: float, total_s: float, ss: dict) -> None:
+    """Carve the measured dispatch interval ``[t0, t0+total_s]`` into
+    synthetic schedule-step spans (prologue / step[t] {comm, stacks} /
+    epilogue), each sized by the cost model's per-step weight from
+    ``_schedule_stats`` and scaled so they sum exactly to the measured
+    wall time.  The host driver can't time individual shard_map steps
+    (one fused device program), so this is the best per-step attribution
+    available — attrs carry the *exact* comm-bytes/flops/occupancy."""
+    tracer = obs.get_tracer()
+    if tracer is None or parent is None or total_s <= 0.0:
+        return
+    w_pro = ss.get("prologue_comm_s", 0.0)
+    w_epi = ss.get("epilogue_comm_s", 0.0)
+    steps = ss.get("steps", [])
+    w_sum = w_pro + w_epi + sum(s["comm_s"] + s["compute_s"]
+                                for s in steps)
+    if w_sum <= 0.0:
+        return
+    scale = total_s / w_sum
+    cur = t0
+    if w_pro > 0.0:
+        tracer.emit("prologue", "comm", t0=cur, dur=w_pro * scale,
+                    parent=parent,
+                    attrs={"comm_bytes": ss.get("prologue_comm_bytes", 0),
+                           "comm_op": ss.get("comm_op")})
+        cur += w_pro * scale
+    for s in steps:
+        sdur = (s["comm_s"] + s["compute_s"]) * scale
+        srec = tracer.emit(
+            f"step[{s['step']}]", "schedule-step", t0=cur, dur=sdur,
+            parent=parent,
+            attrs={"step": s["step"], "skipped": s["skipped"],
+                   "comm_bytes": s["comm_bytes"], "flops": s["flops"],
+                   "occupancy": s.get("occupancy"),
+                   "n_entries": s.get("n_entries")})
+        if s["comm_s"] > 0.0:
+            tracer.emit("comm", "comm", t0=cur, dur=s["comm_s"] * scale,
+                        parent=srec,
+                        attrs={"comm_bytes": s["comm_bytes"],
+                               "comm_op": ss.get("comm_op")})
+        if s["compute_s"] > 0.0:
+            tracer.emit("stacks", "compute",
+                        t0=cur + s["comm_s"] * scale,
+                        dur=s["compute_s"] * scale, parent=srec,
+                        attrs={"flops": s["flops"],
+                               "occupancy": s.get("occupancy")})
+        cur += sdur
+    if w_epi > 0.0:
+        tracer.emit("epilogue", "comm", t0=cur, dur=w_epi * scale,
+                    parent=parent,
+                    attrs={"comm_bytes": ss.get("epilogue_comm_bytes", 0),
+                           "comm_op": ss.get("comm_op")})
+
+
 def _verified_result(verify, a, b, c, rerun, *, plan, block_m, block_k,
                      block_n, a_mask, b_mask, a_norms, b_norms, filter_eps,
-                     verify_budget):
+                     verify_budget, _tele: bool = False):
     """ABFT verification of a raw product (repro.robustness.abft):
     price the checksum overhead against the plan (``verify="auto"``),
     screen the operands with the finite tripwires, apply any installed
@@ -317,14 +386,24 @@ def _verified_result(verify, a, b, c, rerun, *, plan, block_m, block_k,
         return c, info
     from repro.robustness import abft, chaos, guards
 
-    guards.assert_finite(a, "A")
-    guards.assert_finite(b, "B")
-    c = chaos.apply_result_hook(c)
-    c, report = abft.verify_and_repair(
-        a, b, c, recompute=rerun,
-        block_m=block_m, block_k=block_k, block_n=block_n,
-        a_mask=a_mask, b_mask=b_mask, a_norms=a_norms, b_norms=b_norms,
-        filter_eps=filter_eps)
+    def _repair_rerun():
+        # a detection re-executes the deterministic dispatch once; the
+        # repair span makes that second dispatch visible in the trace
+        with obs.maybe_span(_tele, "repair", cat="repair"):
+            return rerun()
+
+    with obs.maybe_span(_tele, "verify", cat="verify", mode=verify) as vsp:
+        guards.assert_finite(a, "A")
+        guards.assert_finite(b, "B")
+        c = chaos.apply_result_hook(c)
+        c, report = abft.verify_and_repair(
+            a, b, c, recompute=_repair_rerun,
+            block_m=block_m, block_k=block_k, block_n=block_n,
+            a_mask=a_mask, b_mask=b_mask, a_norms=a_norms, b_norms=b_norms,
+            filter_eps=filter_eps)
+        vsp.set(detected=bool(report.detected),
+                repaired=bool(report.repaired),
+                n_flagged_blocks=len(report.flagged_blocks))
     info["report"] = report
     return jnp.asarray(c), info
 
@@ -424,7 +503,68 @@ def distributed_matmul(
     stack statistics (``executor_stats``) and the per-step comm/compute
     split of the executed schedule (``schedule_stats``).  Only usable
     outside jit — the plan is a host-side object.
+
+    Telemetry (repro.obs): with ``obs.enable()`` active — and only
+    then — the call records a ``multiply`` span nesting plan ->
+    dispatch -> schedule-step -> comm/stacks (plus verify -> repair)
+    and logs the plan's predicted-vs-measured cost for the planner
+    scoreboard.  Disabled (the default) or under ``jax.jit`` tracing
+    this wrapper adds one boolean check and the output is bit
+    identical.
     """
+    tele = obs.enabled() and not (isinstance(a, jax.core.Tracer)
+                                  or isinstance(b, jax.core.Tracer))
+    call = dict(
+        mesh=mesh, grid=grid, algorithm=algorithm, densify=densify,
+        block_m=block_m, block_k=block_k, block_n=block_n,
+        stack_size=stack_size, align=align, local_kernel=local_kernel,
+        a_mask=a_mask, b_mask=b_mask, a_norms=a_norms, b_norms=b_norms,
+        filter_eps=filter_eps, stack_bins=stack_bins, precision=precision,
+        pipeline_depth=pipeline_depth, double_buffer=double_buffer,
+        verify=verify, verify_budget=verify_budget,
+        return_plan=return_plan, **kw)
+    if not tele:
+        return _distributed_matmul(a, b, **call)
+    attrs = {"algorithm": algorithm}
+    if getattr(a, "ndim", 0) == 2 and getattr(b, "ndim", 0) == 2:
+        attrs.update(m=int(a.shape[0]), k=int(a.shape[1]),
+                     n=int(b.shape[1]))
+    with obs.span("multiply", cat="multiply", **attrs):
+        return _distributed_matmul(a, b, _tele=True, **call)
+
+
+def _distributed_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    mesh: jax.sharding.Mesh,
+    grid: GridSpec = GridSpec(),
+    algorithm: str = "auto",
+    densify: Optional[bool] = None,
+    block_m: int = 64,
+    block_k: int = 64,
+    block_n: int = 64,
+    stack_size: Optional[int] = None,
+    align: Optional[bool] = None,
+    local_kernel: Optional[str] = None,
+    a_mask: Optional[np.ndarray] = None,
+    b_mask: Optional[np.ndarray] = None,
+    a_norms: Optional[np.ndarray] = None,
+    b_norms: Optional[np.ndarray] = None,
+    filter_eps: Optional[float] = None,
+    stack_bins: Optional[int] = None,
+    precision=jax.lax.Precision.DEFAULT,
+    pipeline_depth: Optional[int] = None,
+    double_buffer: Optional[bool] = None,
+    verify: Optional[str] = None,
+    verify_budget: Optional[float] = None,
+    return_plan: bool = False,
+    _tele: bool = False,
+    **kw,
+) -> jax.Array:
+    """``distributed_matmul`` body (see its docstring); ``_tele`` is
+    the per-call telemetry flag resolved by the public wrapper
+    (False when telemetry is disabled or under jit tracing)."""
     m, k = a.shape
     k2, n = b.shape
     if k != k2:
@@ -443,44 +583,53 @@ def distributed_matmul(
         b_norms = block_norms_of(b, block_k, block_n, b_mask)
 
     plan = None
-    if algorithm == "auto" or return_plan or verify is not None:
+    # telemetry forces a plan even for pinned algorithms: the planner
+    # scoreboard needs predicted_s for every executed plan
+    if algorithm == "auto" or return_plan or verify is not None or _tele:
         from repro.planner.plan import plan_multiply
 
-        pr0, pc0 = grid.grid_shape(mesh)
-        mesh_shape = ((pr0, pc0) if grid.stack_axis is None
-                      else (pr0, pc0, grid.stack_size(mesh)))
-        occ = _global_occupancy(m, k, n, block_m, block_k, block_n,
-                                a_mask, b_mask, a_norms, b_norms,
-                                filter_eps)
-        # a pinned summa with the PUMMA broadcast prices through the
-        # planner's "summa_gather" model — full-K gathered panels, whose
-        # sqrt(P)-fold operand replication the mem feasibility gate must
-        # see (auto never enumerates it; only this pin reaches it)
-        plan_algorithm = None if algorithm == "auto" else algorithm
-        if algorithm == "summa" and kw.get("bcast") == "gather":
-            plan_algorithm = "summa_gather"
-        plan = plan_multiply(
-            m, k, n, blocks=(block_m, block_k, block_n),
-            mesh_shape=mesh_shape, occupancy=occ,
-            dtype=jnp.promote_types(a.dtype, b.dtype),
-            algorithm=plan_algorithm,
-            # a fixed algorithm executes the legacy densified default
-            # when densify is unset — the plan must describe that, not
-            # the planner's own local-path preference
-            densify=(densify if algorithm == "auto" or densify is not None
-                     else True),
-            stack_size=stack_size, align=align)
-        if algorithm == "auto":
-            algorithm = plan.algorithm
-            if densify is None:
-                densify = plan.densify
-            if not densify:
-                if stack_size is None:
-                    stack_size = plan.stack_tile
-                if align is None:
-                    align = plan.align
-            if pipeline_depth is None and double_buffer is None:
-                pipeline_depth = plan.pipeline_depth
+        with obs.maybe_span(_tele, "plan", cat="plan") as psp:
+            pr0, pc0 = grid.grid_shape(mesh)
+            mesh_shape = ((pr0, pc0) if grid.stack_axis is None
+                          else (pr0, pc0, grid.stack_size(mesh)))
+            occ = _global_occupancy(m, k, n, block_m, block_k, block_n,
+                                    a_mask, b_mask, a_norms, b_norms,
+                                    filter_eps)
+            # a pinned summa with the PUMMA broadcast prices through the
+            # planner's "summa_gather" model — full-K gathered panels,
+            # whose sqrt(P)-fold operand replication the mem feasibility
+            # gate must see (auto never enumerates it; only this pin
+            # reaches it)
+            plan_algorithm = None if algorithm == "auto" else algorithm
+            if algorithm == "summa" and kw.get("bcast") == "gather":
+                plan_algorithm = "summa_gather"
+            plan = plan_multiply(
+                m, k, n, blocks=(block_m, block_k, block_n),
+                mesh_shape=mesh_shape, occupancy=occ,
+                dtype=jnp.promote_types(a.dtype, b.dtype),
+                algorithm=plan_algorithm,
+                # a fixed algorithm executes the legacy densified
+                # default when densify is unset — the plan must describe
+                # that, not the planner's own local-path preference
+                densify=(densify
+                         if algorithm == "auto" or densify is not None
+                         else True),
+                stack_size=stack_size, align=align)
+            if algorithm == "auto":
+                algorithm = plan.algorithm
+                if densify is None:
+                    densify = plan.densify
+                if not densify:
+                    if stack_size is None:
+                        stack_size = plan.stack_tile
+                    if align is None:
+                        align = plan.align
+                if pipeline_depth is None and double_buffer is None:
+                    pipeline_depth = plan.pipeline_depth
+            psp.set(algorithm=plan.algorithm, densify=bool(plan.densify),
+                    predicted_s=float(plan.predicted_s),
+                    occupancy=float(plan.occupancy),
+                    trivial=bool(plan.trivial))
     if densify is None:
         densify = True  # legacy default for fixed algorithms
     if algorithm not in ("cannon", "cannon25d", "ts_k", "ts_m", "ts_n",
@@ -618,25 +767,65 @@ def distributed_matmul(
             a, b, mesh=mesh, grid=grid, local_matmul=lm,
             precision=precision, pipeline_depth=depth, **kw)
 
-    c = _run()
+    sched_stats_cache = [None]
+
+    def _sched_stats():
+        if sched_stats_cache[0] is None:
+            itemsize = int(jnp.dtype(
+                jnp.promote_types(a.dtype, b.dtype)).itemsize)
+            sched_stats_cache[0] = _schedule_stats(
+                algorithm, grid=grid, mesh=mesh, local_shape=(ml, kl, nl),
+                itemsize=itemsize, lm=lm, densify=densify,
+                pipeline_depth=depth, reduce_kw=kw)
+        return sched_stats_cache[0]
+
+    dispatch_times: List[float] = []
+
+    def _run_traced():
+        # telemetry off: exactly the legacy path — no timing, no sync
+        if not _tele:
+            return _run()
+        with obs.span("dispatch", cat="dispatch", algorithm=algorithm,
+                      densify=bool(densify), pipeline_depth=depth) as dsp:
+            t0 = time.perf_counter()
+            c = jax.block_until_ready(_run())
+            dt = time.perf_counter() - t0
+        dispatch_times.append(dt)
+        try:
+            ss = _sched_stats()
+        except Exception:
+            ss = None  # telemetry must never break the multiply
+        if ss is not None:
+            dsp.set(comm_bytes=int(ss.get("total_comm_bytes", 0)))
+            _emit_step_spans(dsp.rec, t0, dt, ss)
+        return c
+
+    c = _run_traced()
     verification = None
     if verify is not None:
         c, verification = _verified_result(
-            verify, a, b, c, _run, plan=plan,
+            verify, a, b, c, _run_traced, plan=plan,
             block_m=block_m, block_k=block_k, block_n=block_n,
             a_mask=a_mask, b_mask=b_mask, a_norms=a_norms, b_norms=b_norms,
-            filter_eps=filter_eps, verify_budget=verify_budget)
+            filter_eps=filter_eps, verify_budget=verify_budget,
+            _tele=_tele)
+    if _tele and plan is not None and not plan.trivial and dispatch_times:
+        # predicted-vs-actual planner accounting: first dispatch is the
+        # clean run (a repair re-execution would re-measure the same
+        # deterministic program)
+        obs.record_plan_outcome(
+            kind="multiply", algorithm=algorithm, densify=bool(densify),
+            m=m, k=k, n=n, occupancy=float(plan.occupancy),
+            predicted_s=float(plan.predicted_s),
+            measured_s=float(dispatch_times[0]),
+            pipeline_depth=int(depth))
     if not return_plan:
         return c
     import dataclasses as _dc
 
-    itemsize = int(jnp.dtype(jnp.promote_types(a.dtype, b.dtype)).itemsize)
     plan = _dc.replace(
         plan,
         executor_stats=_collect_executor_stats(lm, densify),
-        schedule_stats=_schedule_stats(
-            algorithm, grid=grid, mesh=mesh, local_shape=(ml, kl, nl),
-            itemsize=itemsize, lm=lm, densify=densify, pipeline_depth=depth,
-            reduce_kw=kw),
+        schedule_stats=_sched_stats(),
         verification=verification)
     return c, plan

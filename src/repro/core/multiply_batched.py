@@ -46,17 +46,21 @@ Pallas GEMM may tile differently from per-product ``lax.dot``).
 """
 from __future__ import annotations
 
+import time
 from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 from .blocking import GridSpec
 from .cannon import cannon_matmul, cannon_step_masks, cannon_step_norms
 from .densify import grouped_densified_local_matmul
 from .engine import batched_stack_executor
-from .multiply import _block_masks, _global_occupancy, _masks_empty
+from .multiply import (_block_masks, _emit_step_spans, _global_occupancy,
+                       _masks_empty, _schedule_stats)
 from .schedule import resolve_pipeline_depth
 from .summa import (summa_matmul, summa_n_panels, summa_step_masks,
                     summa_step_norms)
@@ -169,6 +173,61 @@ def distributed_matmul_batched(
 ):
     """C[g] = A[g] @ B[g] for every product ``g`` of a fused batch.
 
+    With telemetry on (``obs.enable()``), records a
+    ``multiply_batched`` span nesting plan -> dispatch ->
+    schedule-step children (G-scaled comm bytes / flops) and logs the
+    batched plan's predicted-vs-measured fused cost; disabled or under
+    jit tracing the call is bit-identical with one boolean of
+    overhead.  See ``_distributed_matmul_batched`` for semantics.
+    """
+    tele = obs.enabled() and not (isinstance(a, jax.core.Tracer)
+                                  or isinstance(b, jax.core.Tracer))
+    call = dict(
+        mesh=mesh, grid=grid, algorithm=algorithm, densify=densify,
+        block_m=block_m, block_k=block_k, block_n=block_n,
+        stack_size=stack_size, align=align, local_kernel=local_kernel,
+        a_masks=a_masks, b_masks=b_masks, a_norms=a_norms, b_norms=b_norms,
+        filter_eps=filter_eps, precision=precision,
+        pipeline_depth=pipeline_depth, double_buffer=double_buffer,
+        return_plan=return_plan, **kw)
+    if not tele:
+        return _distributed_matmul_batched(a, b, **call)
+    attrs = {"algorithm": algorithm}
+    if getattr(a, "ndim", 0) == 3 and getattr(b, "ndim", 0) == 3:
+        attrs.update(n_groups=int(a.shape[0]), m=int(a.shape[1]),
+                     k=int(a.shape[2]), n=int(b.shape[2]))
+    with obs.span("multiply_batched", cat="multiply", **attrs):
+        return _distributed_matmul_batched(a, b, _tele=True, **call)
+
+
+def _distributed_matmul_batched(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    mesh: jax.sharding.Mesh,
+    grid: GridSpec = GridSpec(),
+    algorithm: str = "auto",
+    densify: Optional[bool] = None,
+    block_m: int = 64,
+    block_k: int = 64,
+    block_n: int = 64,
+    stack_size: Optional[int] = None,
+    align: Optional[bool] = None,
+    local_kernel: Optional[str] = None,
+    a_masks: Optional[Sequence[Optional[np.ndarray]]] = None,
+    b_masks: Optional[Sequence[Optional[np.ndarray]]] = None,
+    a_norms: Optional[Sequence[Optional[np.ndarray]]] = None,
+    b_norms: Optional[Sequence[Optional[np.ndarray]]] = None,
+    filter_eps: Optional[float] = None,
+    precision=jax.lax.Precision.DEFAULT,
+    pipeline_depth: Optional[int] = None,
+    double_buffer: Optional[bool] = None,
+    return_plan: bool = False,
+    _tele: bool = False,
+    **kw,
+):
+    """C[g] = A[g] @ B[g] for every product ``g`` of a fused batch.
+
     ``a``: (G, M, K) and ``b``: (G, K, N), both sharded over the
     trailing two axes exactly like the single-product
     ``distributed_matmul`` operands (the leading product dim is
@@ -216,44 +275,54 @@ def distributed_matmul_batched(
                    for gi in range(g_count)]
 
     plan = None
-    if algorithm == "auto" or return_plan:
+    # telemetry forces a plan even for pinned algorithms (scoreboard
+    # needs the predicted fused cost)
+    if algorithm == "auto" or return_plan or _tele:
         from repro.planner.plan import plan_multiply_batched
 
-        pr0, pc0 = grid.grid_shape(mesh)
-        occs = [
-            _global_occupancy(
-                m, k, n, block_m, block_k, block_n,
-                _per_group(a_masks, gi, g_count, "a_masks"),
-                _per_group(b_masks, gi, g_count, "b_masks"),
-                _per_group(a_norms, gi, g_count, "a_norms"),
-                _per_group(b_norms, gi, g_count, "b_norms"),
-                filter_eps)
-            for gi in range(g_count)
-        ]
-        occ = sum(occs) / len(occs)
-        occ_max = max(occs)
-        # groups pad to the largest group's stack shape: the mean/max
-        # occupancy spread estimates the fused dispatch's padding waste
-        pad_est = 1.0 - occ / occ_max if occ_max > 0 else 0.0
-        plan = plan_multiply_batched(
-            g_count, m, k, n, blocks=(block_m, block_k, block_n),
-            mesh_shape=(pr0, pc0), occupancy=occ,
-            dtype=jnp.promote_types(a.dtype, b.dtype),
-            algorithm=None if algorithm == "auto" else algorithm,
-            densify=(densify if algorithm == "auto" or densify is not None
-                     else True),
-            padding_frac=pad_est, stack_size=stack_size, align=align)
-        if algorithm == "auto":
-            algorithm = plan.algorithm
-            if densify is None:
-                densify = plan.densify
-            if not densify:
-                if stack_size is None:
-                    stack_size = plan.stack_tile
-                if align is None:
-                    align = plan.align
-            if pipeline_depth is None and double_buffer is None:
-                pipeline_depth = plan.pipeline_depth
+        with obs.maybe_span(_tele, "plan", cat="plan") as psp:
+            pr0, pc0 = grid.grid_shape(mesh)
+            occs = [
+                _global_occupancy(
+                    m, k, n, block_m, block_k, block_n,
+                    _per_group(a_masks, gi, g_count, "a_masks"),
+                    _per_group(b_masks, gi, g_count, "b_masks"),
+                    _per_group(a_norms, gi, g_count, "a_norms"),
+                    _per_group(b_norms, gi, g_count, "b_norms"),
+                    filter_eps)
+                for gi in range(g_count)
+            ]
+            occ = sum(occs) / len(occs)
+            occ_max = max(occs)
+            # groups pad to the largest group's stack shape: the
+            # mean/max occupancy spread estimates the fused dispatch's
+            # padding waste
+            pad_est = 1.0 - occ / occ_max if occ_max > 0 else 0.0
+            plan = plan_multiply_batched(
+                g_count, m, k, n, blocks=(block_m, block_k, block_n),
+                mesh_shape=(pr0, pc0), occupancy=occ,
+                dtype=jnp.promote_types(a.dtype, b.dtype),
+                algorithm=None if algorithm == "auto" else algorithm,
+                densify=(densify
+                         if algorithm == "auto" or densify is not None
+                         else True),
+                padding_frac=pad_est, stack_size=stack_size, align=align)
+            if algorithm == "auto":
+                algorithm = plan.algorithm
+                if densify is None:
+                    densify = plan.densify
+                if not densify:
+                    if stack_size is None:
+                        stack_size = plan.stack_tile
+                    if align is None:
+                        align = plan.align
+                if pipeline_depth is None and double_buffer is None:
+                    pipeline_depth = plan.pipeline_depth
+            psp.set(algorithm=plan.algorithm, fuse=bool(plan.fuse),
+                    densify=bool(plan.densify),
+                    predicted_fused_s=float(plan.predicted_fused_s),
+                    predicted_looped_s=float(plan.predicted_looped_s),
+                    occupancy=float(occ), trivial=bool(plan.trivial))
     if densify is None:
         densify = True  # mirror distributed_matmul's fixed-algorithm default
     if algorithm not in BATCHED_ALGORITHMS:
@@ -340,14 +409,46 @@ def distributed_matmul_batched(
                 filter_eps=filter_eps, **batched_kw)
 
     # ---- data exchange (one schedule for the whole batch) ------------
-    if algorithm == "cannon":
-        c = cannon_matmul(
+    def _run():
+        if algorithm == "cannon":
+            return cannon_matmul(
+                a, b, mesh=mesh, grid=grid, local_matmul=lm,
+                precision=precision, pipeline_depth=depth, **kw)
+        return summa_matmul(
             a, b, mesh=mesh, grid=grid, local_matmul=lm,
             precision=precision, pipeline_depth=depth, **kw)
+
+    if not _tele:
+        c = _run()
     else:
-        c = summa_matmul(
-            a, b, mesh=mesh, grid=grid, local_matmul=lm,
-            precision=precision, pipeline_depth=depth, **kw)
+        with obs.span("dispatch", cat="dispatch", algorithm=algorithm,
+                      densify=bool(densify), pipeline_depth=depth,
+                      n_groups=g_count) as dsp:
+            t0 = time.perf_counter()
+            c = jax.block_until_ready(_run())
+            dt = time.perf_counter() - t0
+        try:
+            # per-step spans from the single-product schedule model,
+            # G-scaled (comm bytes and dense flops multiply by the
+            # group count on the fused batch)
+            itemsize = int(jnp.dtype(
+                jnp.promote_types(a.dtype, b.dtype)).itemsize)
+            ss = _schedule_stats(
+                algorithm, grid=grid, mesh=mesh, local_shape=(ml, kl, nl),
+                itemsize=itemsize, lm=lm, densify=densify,
+                pipeline_depth=depth, reduce_kw=kw, n_groups=g_count)
+        except Exception:
+            ss = None  # telemetry must never break the multiply
+        if ss is not None:
+            dsp.set(comm_bytes=int(ss.get("total_comm_bytes", 0)))
+            _emit_step_spans(dsp.rec, t0, dt, ss)
+        if plan is not None and not plan.trivial:
+            obs.record_plan_outcome(
+                kind="multiply_batched", algorithm=algorithm,
+                densify=bool(densify), n_groups=g_count, m=m, k=k, n=n,
+                fuse=bool(plan.fuse),
+                predicted_s=float(plan.predicted_fused_s),
+                measured_s=float(dt), pipeline_depth=int(depth))
     if not return_plan:
         return c
     import dataclasses as _dc

@@ -242,7 +242,8 @@ def execute_schedule(
 def schedule_step_meta(sched: Schedule) -> dict:
     """Host-side summary of a schedule's communication structure —
     consumed by ``multiply.py`` to build the per-step comm/compute
-    report attached to executed plans."""
+    report attached to executed plans and by the telemetry layer
+    (repro.obs) for dispatch-span comm-bytes attributes."""
     per_step = list(sched.step_comm_bytes) if sched.step_comm_bytes \
         else [0] * sched.n_steps
     return {
@@ -253,4 +254,7 @@ def schedule_step_meta(sched: Schedule) -> dict:
         "prologue_comm_bytes": int(sched.prologue_comm_bytes),
         "step_comm_bytes": [int(x) for x in per_step],
         "epilogue_comm_bytes": int(sched.epilogue_comm_bytes),
+        "total_comm_bytes": int(sched.prologue_comm_bytes)
+        + sum(int(x) for x in per_step)
+        + int(sched.epilogue_comm_bytes),
     }

@@ -34,6 +34,8 @@ from .cost_model import DEFAULT_HARDWARE, HardwareModel
 
 __all__ = [
     "DEFAULT_CALIBRATION",
+    "DEFAULT_PLAN_LOG",
+    "drift_report",
     "fit_from_artifacts",
     "micro_calibrate",
     "measure_overlap",
@@ -368,6 +370,27 @@ def save_calibration(constants: Dict[str, float],
     return path
 
 
+DEFAULT_PLAN_LOG = os.path.join("artifacts", "obs", "plan_outcomes.jsonl")
+
+
+def drift_report(path: str = DEFAULT_PLAN_LOG, *,
+                 threshold: float = 1.0, min_samples: int = 1) -> dict:
+    """Check the telemetry layer's predicted-vs-actual plan-outcome log
+    (``obs.record_plan_outcome`` rows, written by traced multiplies and
+    ``benchmarks/bench_obs.py``) for calibration drift: algorithms
+    whose median |relative error| exceeds ``threshold`` are flagged —
+    the signal that this machine's constants need recalibration."""
+    from repro.obs import read_jsonl
+    from repro.obs.scoreboard import check_drift
+
+    records = read_jsonl(path)
+    result = check_drift(records, threshold=threshold,
+                         min_samples=min_samples)
+    result["path"] = path
+    result["n_records"] = len(records)
+    return result
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench-dir", default=DEFAULT_BENCH_DIR)
@@ -375,7 +398,45 @@ def main():
     ap.add_argument("--micro", action="store_true",
                     help="also measure constants live (dense dot, fused "
                          "executor; single-device only from this CLI)")
+    ap.add_argument("--check-drift", action="store_true",
+                    help="instead of calibrating, read the predicted-vs-"
+                         "actual plan-outcome log and warn when a per-"
+                         "algorithm median |rel err| exceeds the "
+                         "threshold")
+    ap.add_argument("--drift-log", default=DEFAULT_PLAN_LOG,
+                    help="plan-outcome JSONL (obs.enable(log_dir=...))")
+    ap.add_argument("--drift-threshold", type=float, default=1.0,
+                    help="median |predicted-measured|/measured per "
+                         "algorithm above which drift is flagged")
+    ap.add_argument("--strict", action="store_true",
+                    help="with --check-drift: exit nonzero when drift "
+                         "is flagged (or the log is missing/empty)")
     args = ap.parse_args()
+
+    if args.check_drift:
+        from repro.obs.scoreboard import render_scoreboard
+
+        result = drift_report(args.drift_log,
+                              threshold=args.drift_threshold)
+        if not result["n_records"]:
+            print(f"no plan outcomes at {args.drift_log} — run a traced "
+                  f"multiply (obs.enable(log_dir=...)) or "
+                  f"benchmarks/bench_obs.py first")
+            if args.strict:
+                raise SystemExit(1)
+            return
+        print(render_scoreboard(result["scoreboard"]))
+        for algo, err in sorted(result["flagged"].items()):
+            print(f"WARNING: {algo}: median |rel err| {err:.2f} exceeds "
+                  f"drift threshold {args.drift_threshold:.2f} — "
+                  f"recalibrate (python -m repro.planner.calibrate)")
+        if result["ok"]:
+            print(f"calibration drift OK ({result['n_records']} outcomes, "
+                  f"threshold {args.drift_threshold:.2f})")
+        elif args.strict:
+            raise SystemExit(
+                f"calibration drift: {sorted(result['flagged'])}")
+        return
 
     constants = fit_from_artifacts(args.bench_dir)
     if args.micro:

@@ -485,12 +485,25 @@ def plan_cache_stats() -> dict:
     inserts one entry, so entries beyond the current size must have
     been evicted.  Valid because ``plan_cache_clear`` resets the
     counters and the size together.
+
+    A thin view over the obs metrics registry (ISSUE 8): the LRU's
+    ``cache_info()`` is synced into ``planner.plan_cache.*`` gauges and
+    the returned dict is read back from those gauges — one source of
+    truth shared with ``python -m repro.obs report`` consumers, same
+    return shape as ever for callers.
     """
+    from repro import obs
+
     info = _plan_cached.cache_info()
-    return {
+    reg = obs.registry()
+    synced = {
         "hits": int(info.hits),
         "misses": int(info.misses),
         "currsize": int(info.currsize),
         "maxsize": int(info.maxsize),
         "evictions": max(int(info.misses) - int(info.currsize), 0),
     }
+    for key, v in synced.items():
+        reg.gauge(f"planner.plan_cache.{key}").set(v)
+    return {key: int(reg.gauge(f"planner.plan_cache.{key}").value)
+            for key in synced}

@@ -59,6 +59,8 @@ import dataclasses
 import functools
 from typing import Callable, Optional, Tuple
 
+from repro import obs
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -225,6 +227,11 @@ def verify_product(
         blocks = tuple((i, j) for i in range(nbr) for j in cols)
     else:
         blocks = ()
+    if obs.enabled():
+        # gated telemetry counters: the disabled path publishes nothing
+        obs.counter("abft.verifications").inc()
+        if blocks:
+            obs.counter("abft.detections").inc()
     return VerificationReport(
         detected=bool(blocks),
         flagged_rows=rows,
@@ -294,6 +301,9 @@ def verify_and_repair(
         repaired=not recheck.detected,
         n_recomputed_blocks=len(report.flagged_blocks),
     )
+    if obs.enabled():
+        obs.counter("abft.repairs" if report.repaired
+                    else "abft.repair_failures").inc()
     if recheck.detected:
         raise guards.CorruptionDetectedError(
             f"corruption persisted after one-shot repair: blocks "

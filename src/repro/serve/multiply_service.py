@@ -65,17 +65,21 @@ Typical pump loop::
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from typing import Callable, Dict, List, Optional
 
-import numpy as np
-
+from repro import obs
 from repro.core.dbcsr import (DBCSRMatrix, _bucket_key, multiply,
                               multiply_batched)
 from repro.robustness import guards
 
 __all__ = ["MultiplyService", "PendingRequest", "TicketPendingError",
            "UnknownTicketError"]
+
+# Per-process instance ids so each service's metrics are isolated under a
+# ``service=svc-<n>`` label in the shared obs registry.
+_SERVICE_IDS = itertools.count()
 
 
 class TicketPendingError(KeyError):
@@ -180,15 +184,18 @@ class MultiplyService:
         self._results: Dict[int, DBCSRMatrix] = {}
         self._errors: Dict[int, BaseException] = {}
         self._pending_tickets: set = set()
-        self._latencies: List[float] = []
-        self._n_dispatches = 0
-        self._n_fused_requests = 0
-        self._n_looped_requests = 0
-        self._n_retries = 0
-        self._n_degradations = 0
-        self._n_error_tickets = 0
-        self._n_nonfinite_quarantined = 0
         self._bucket_reports: List[dict] = []
+        # All counters/latencies live in the process-wide obs metrics
+        # registry (one source of truth), isolated per instance by the
+        # ``service=`` label; ``stats()`` is a thin view over it.
+        self.service_id = f"svc-{next(_SERVICE_IDS)}"
+
+    # -- metrics (registry-backed; ``stats()`` reads these back) -------
+    def _counter(self, name: str) -> obs.Counter:
+        return obs.counter(f"service.{name}", service=self.service_id)
+
+    def _latency_hist(self) -> obs.Histogram:
+        return obs.histogram("service.latency_s", service=self.service_id)
 
     # -- request side --------------------------------------------------
     def submit(self, a: DBCSRMatrix, b: DBCSRMatrix) -> int:
@@ -206,6 +213,7 @@ class MultiplyService:
             guards.validate_multiply_request(a, b)
         ticket = self._next_ticket
         self._next_ticket += 1
+        self._counter("requests").inc()
         key = _bucket_key(a, b, self.filter_eps)
         self._queues.setdefault(key, []).append(
             PendingRequest(ticket, a, b, self.clock()))
@@ -273,7 +281,7 @@ class MultiplyService:
         """Record one drained bucket: results (finite-screened), bucket
         report, counters, latencies."""
         t_done = self.clock()
-        self._n_dispatches += 1
+        self._counter("dispatches").inc()
         for r, c in zip(batch, results):
             if c is None:
                 continue  # error ticket already recorded by the caller
@@ -281,16 +289,16 @@ class MultiplyService:
                 self._set_error(r.ticket, guards.NonFiniteResultError(
                     f"request {r.ticket}: product contains NaN/Inf "
                     f"(result tripwire)"))
-                self._n_nonfinite_quarantined += 1
+                self._counter("nonfinite_quarantined").inc()
                 n_errors += 1
                 continue
             self._results[r.ticket] = c
             self._pending_tickets.discard(r.ticket)
-            self._latencies.append(t_done - r.submit_t)
+            self._latency_hist().observe(t_done - r.submit_t)
         if fused:
-            self._n_fused_requests += len(batch)
+            self._counter("fused_requests").inc(len(batch))
         else:
-            self._n_looped_requests += len(batch)
+            self._counter("looped_requests").inc(len(batch))
         self._bucket_reports.append({
             "key": key, "n_requests": len(batch), "fused": fused,
             "stage": stage, "n_errors": n_errors, "report": report})
@@ -298,7 +306,7 @@ class MultiplyService:
     def _set_error(self, ticket: int, exc: BaseException) -> None:
         self._errors[ticket] = exc
         self._pending_tickets.discard(ticket)
-        self._n_error_tickets += 1
+        self._counter("error_tickets").inc()
 
     def _dispatch(self, key: tuple, batch: List[PendingRequest]) -> List[int]:
         """Drain one bucket through the degradation ladder.  NEVER
@@ -323,7 +331,7 @@ class MultiplyService:
                         fused=fused_arg, return_plan=True, **self.kw)
                 except Exception:
                     if attempt + 1 < attempts:
-                        self._n_retries += 1
+                        self._counter("retries").inc()
                         self.sleep(self.backoff_s * (2 ** attempt))
                     continue
                 fused = bool(report["buckets"]
@@ -331,7 +339,7 @@ class MultiplyService:
                 self._deliver(key, batch, results, report,
                               fused=fused, stage=stage)
                 return [r.ticket for r in batch]
-            self._n_degradations += 1
+            self._counter("degradations").inc()
         # final rung: per-request isolation — a poison request is
         # quarantined with its own error ticket, batch-mates complete
         results: List[Optional[DBCSRMatrix]] = []
@@ -352,19 +360,24 @@ class MultiplyService:
 
     # -- observability -------------------------------------------------
     def stats(self) -> dict:
-        lat = np.asarray(self._latencies, dtype=np.float64)
+        """Legacy stats dict, now a thin view over the obs metrics
+        registry (``service.*`` metrics labeled with this instance's
+        ``service=`` id).  Keys and values are unchanged; the histogram
+        percentiles match ``np.percentile(..., 'linear')`` exactly."""
+        lat = self._latency_hist()
         return {
-            "n_requests": self._next_ticket,
+            "n_requests": int(self._counter("requests").value),
             "n_pending": self.n_pending,
-            "n_completed": len(self._latencies),
-            "n_dispatches": self._n_dispatches,
-            "n_fused_requests": self._n_fused_requests,
-            "n_looped_requests": self._n_looped_requests,
-            "n_retries": self._n_retries,
-            "n_degradations": self._n_degradations,
-            "n_error_tickets": self._n_error_tickets,
-            "n_nonfinite_quarantined": self._n_nonfinite_quarantined,
-            "latency_p50_s": float(np.percentile(lat, 50)) if lat.size else 0.0,
-            "latency_p99_s": float(np.percentile(lat, 99)) if lat.size else 0.0,
+            "n_completed": lat.count,
+            "n_dispatches": int(self._counter("dispatches").value),
+            "n_fused_requests": int(self._counter("fused_requests").value),
+            "n_looped_requests": int(self._counter("looped_requests").value),
+            "n_retries": int(self._counter("retries").value),
+            "n_degradations": int(self._counter("degradations").value),
+            "n_error_tickets": int(self._counter("error_tickets").value),
+            "n_nonfinite_quarantined": int(
+                self._counter("nonfinite_quarantined").value),
+            "latency_p50_s": lat.percentile(50),
+            "latency_p99_s": lat.percentile(99),
             "buckets": list(self._bucket_reports),
         }

@@ -27,6 +27,8 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
+
 __all__ = ["banded_hamiltonian", "initial_density", "mcweeny_purify"]
 
 
@@ -171,6 +173,12 @@ def mcweeny_purify(
             entry["n_norm_filtered_triples"] = filtered
             entry["retained_flops"] = retained * flop
             entry["filtered_flops"] = filtered * flop
+        if obs.enabled():
+            # the canonical sparsity-evolution signal as gauge samples:
+            # occupancy rises for a step or two, then decays to the
+            # converged support (gauge history renders the curve)
+            obs.gauge("purification.occupancy").set(entry["occupancy"])
+            obs.gauge("purification.idempotency").set(entry["idempotency"])
         trace.append(entry)
         P = Pn
     return P, trace
