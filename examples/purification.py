@@ -2,7 +2,7 @@
 norm-based filtering exists for (CP2K's linear-scaling SCF on DBCSR).
 
 McWeeny's iteration  P <- 3 P^2 - 2 P^3  is run end to end through
-``dbcsr.multiply(filter_eps=1e-6)`` on a 4-device (2x2) mesh:
+``dbcsr.multiply(filter_eps=1e-6)`` on a 16-device (4x4) mesh:
 
   * the Hamiltonian is a gapped block-banded insulator
     (repro.sparsity.workloads.banded_hamiltonian); the initial guess is
@@ -21,10 +21,18 @@ monotonically to the converged density's support (here: exactly the
 diagonal) while the idempotency error ||P^2 - P|| crashes to zero and
 tr(P) stays pinned at the electron count.
 
+The trajectory is run twice — once with the legacy union-of-ranks
+plans (``rank_exact=False``) and once rank-exact (the default) — and
+the per-iteration busiest-rank executed triples are compared: on the
+banded support a 4x4 grid's union plan makes every rank execute every
+rank's band chunks, so rank-exact execution must shrink the busiest
+rank's load on every sparse iteration (asserted at the end).
+
     PYTHONPATH=src python examples/purification.py
 """
 import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=16")
 
 import time
 
@@ -46,28 +54,35 @@ def main():
     H, mask = banded_hamiltonian(n, bs)
     P0_host = initial_density(H)
 
-    mesh = make_mesh((2, 2), ("data", "model"))
+    mesh = make_mesh((4, 4), ("data", "model"))
     grid = GridSpec("data", "model")
     P0 = dbcsr.create(P0_host.astype(np.float32), mesh=mesh, grid=grid,
                       block_size=bs, block_mask=mask)
     nb = P0.layout.nblock_rows
     print(f"== McWeeny purification: {n}x{n}, {nb}x{nb} blocks of {bs}, "
-          f"2x2 mesh, filter_eps={FILTER_EPS:g} ==")
+          f"4x4 mesh, filter_eps={FILTER_EPS:g} ==")
     print(f"initial guess: occupancy {P0.occupancy:.4f} "
           f"({int(mask.sum())}/{nb * nb} blocks), "
           f"tr(P0) = {float(P0.trace()):.2f} (electrons: {n // 2})")
 
+    # blocked path + jnp reference kernel: the stack executor runs
+    # the eps-filtered plans (interpret-mode Pallas is the same
+    # math, just slower on this host container)
+    base_kw = dict(densify=False, local_kernel="ref")
+
+    # union baseline: every rank executes the union-of-ranks plan
+    _, union_trace = mcweeny_purify(
+        P0, mesh=mesh, n_iter=N_ITER, filter_eps=FILTER_EPS,
+        multiply_kw=dict(base_kw, rank_exact=False))
+
     t0 = time.time()
-    # traced run: every multiply leaves a span tree, and the workload
-    # publishes per-iteration occupancy into the metrics registry —
-    # the gauge's sample history IS the decay curve
+    # traced rank-exact run: every multiply leaves a span tree, and the
+    # workload publishes per-iteration occupancy into the metrics
+    # registry — the gauge's sample history IS the decay curve
     obs.enable(log_dir="artifacts/obs")
     P, trace = mcweeny_purify(
         P0, mesh=mesh, n_iter=N_ITER, filter_eps=FILTER_EPS,
-        # blocked path + jnp reference kernel: the stack executor runs
-        # the eps-filtered plans (interpret-mode Pallas is the same
-        # math, just slower on this host container)
-        multiply_kw=dict(densify=False, local_kernel="ref"))
+        multiply_kw=base_kw)
     obs.disable()
     dt = time.time() - t0
 
@@ -100,7 +115,23 @@ def main():
     assert monotone and decayed, \
         "purification occupancy did not decay monotonically after the peak"
     assert abs(trace[-1]["trace_P"] - n // 2) < 0.5, "electron count drifted"
-    print("purification trace OK")
+
+    # rank-exact vs union: busiest-rank executed triples per iteration
+    print(f"{'iter':>4s} {'union/rank':>10s} {'busiest':>8s} "
+          f"{'shrink':>7s} {'imbalance':>9s}")
+    shrunk = []
+    for tu, tr in zip(union_trace, trace):
+        u = tu.get("max_rank_entries", 0)     # union: == n_entries
+        r = tr.get("max_rank_entries", 0)
+        if not (u and r):
+            continue
+        shrunk.append(r < u)
+        print(f"{tr['iteration']:4d} {u:10d} {r:8d} {u / r:6.2f}x "
+              f"{tr.get('rank_imbalance', 1.0):9.2f}")
+    assert shrunk and all(shrunk), \
+        "rank-exact busiest-rank load did not shrink vs the union plan"
+    print("purification trace OK; rank-exact shrank the busiest rank's "
+          "load on every iteration")
 
 
 if __name__ == "__main__":

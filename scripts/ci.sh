@@ -19,6 +19,14 @@ python -m pytest -x -q
 # a larger cap)
 python benchmarks/bench_sparse.py --smoke --check
 
+# rank-exact execution (ISSUE 9): banded/block-diagonal/power-law
+# patterns on a 2x2 mesh (artifacts/bench/sparse_patterns.json) —
+# --check fails the build unless rank-exact products are bitwise equal
+# to the union plan's, banded executed-triples-per-rank shrink >= 1.5x
+# vs union, and the dense uniform-fill collapse adds no dispatch
+# regression beyond jitter
+python benchmarks/bench_sparse.py --patterns --smoke --check
+
 # norm-based on-the-fly filtering (repro.sparsity): eps sweep +
 # McWeeny purification trace (artifacts/bench/filter_smoke.json) —
 # --check fails the build if retained triples stop falling with eps,

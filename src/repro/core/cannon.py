@@ -43,7 +43,7 @@ from .schedule import (RolledSpec, Schedule, execute_schedule,
                        resolve_pipeline_depth)
 
 __all__ = ["cannon_matmul", "build_cannon_schedule", "cannon_step_masks",
-           "cannon_step_norms"]
+           "cannon_step_norms", "cannon_rank_steps"]
 
 
 def _skew_perm(pg: int, which: str):
@@ -220,6 +220,57 @@ def cannon_step_norms(
                                out=pair)
         out.append(pair)
     return out
+
+
+def cannon_rank_steps(
+    am: np.ndarray, bm: np.ndarray, pg: int, c_repl: int = 1,
+    a_norms: Optional[np.ndarray] = None,
+    b_norms: Optional[np.ndarray] = None,
+) -> List[List[dict]]:
+    """Rank-exact twin of ``cannon_step_masks``/``cannon_step_norms``:
+    per step, per RANK local mask (and norm) kwargs instead of the
+    union over ranks.
+
+    ``out[t][r]`` is the mask/norm kwarg dict for the rank with flat
+    index ``r = (p * pg + i) * pg + j`` (stack-major, matching
+    ``cannon25d._skew25d_perm``; plain Cannon is the ``c_repl == 1``
+    slice ``r = i * pg + j``) at inner shift step ``t`` — the exact A
+    chunk ``(i, q)`` x B chunk ``(q, j)`` with
+    ``q = (i + j + t + p*spr) % pg``.  The factored ``a_mask``/
+    ``b_mask`` form is exact per rank (no cross-rank union), and the
+    norms are the rank's own chunk norms — eps filtering against them
+    is DBCSR's true local filter rather than the union-of-max bound.
+    """
+    nbr, nbk = am.shape
+    nbc = bm.shape[1]
+    if nbr % pg or nbk % pg or nbc % pg:
+        raise ValueError(
+            f"block grid ({nbr},{nbk},{nbc}) not divisible by cannon grid "
+            f"side {pg}")
+    if c_repl < 1 or pg % c_repl:
+        raise ValueError(f"grid side {pg} not divisible by replication {c_repl}")
+    lr, lk, lc = nbr // pg, nbk // pg, nbc // pg
+    spr = pg // c_repl
+    if a_norms is not None:
+        a_norms = np.asarray(a_norms, dtype=np.float32)
+        b_norms = np.asarray(b_norms, dtype=np.float32)
+    steps: List[List[dict]] = []
+    for t in range(spr):
+        ranks: List[dict] = []
+        for p in range(c_repl):
+            for i in range(pg):
+                rs = slice(i * lr, (i + 1) * lr)
+                for j in range(pg):
+                    q = (i + j + t + p * spr) % pg
+                    ks = slice(q * lk, (q + 1) * lk)
+                    cs = slice(j * lc, (j + 1) * lc)
+                    kw = {"a_mask": am[rs, ks], "b_mask": bm[ks, cs]}
+                    if a_norms is not None:
+                        kw["a_norms"] = a_norms[rs, ks]
+                        kw["b_norms"] = b_norms[ks, cs]
+                    ranks.append(kw)
+        steps.append(ranks)
+    return steps
 
 
 def _default_local_matmul(precision):

@@ -71,17 +71,22 @@ from repro import obs
 
 from .blocking import BlockLayout
 from .densify import from_blocks, to_blocks
-from .stacks import StackPlan, build_stacks, pad_plans, STACK_SIZE
+from .stacks import (StackPlan, build_stacks, pad_plans, stack_rank_slab,
+                     STACK_SIZE)
 
 __all__ = [
     "BatchedExecutorPlan",
     "ExecutorPlan",
+    "RankExecutorPlan",
     "batched_stack_executor",
     "build_batched_executor_plan",
     "build_executor_plan",
+    "build_rank_executor_plan",
     "execute_batched_plan",
     "execute_plan",
     "execute_plans_looped",
+    "execute_rank_plan",
+    "rank_stack_executor",
     "resolve_stack_bins",
     "stack_executor",
 ]
@@ -938,6 +943,300 @@ def stack_executor(
 
     f.executor_plan = plan
     f.plans = list(plan.plans)  # legacy attribute (benchmarks/stats)
+    f.align = align
+    f.stack_size = stack_size
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Rank-exact execution: one padded plan slab per rank, selected by
+# axis_index inside shard_map (ISSUE 9 / ROADMAP "Rank-exact execution")
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RankExecutorPlan:
+    """Stacked per-rank plans for one SPMD local multiply.
+
+    ``slab`` is the host-constant ``(R, S, T, 4)`` tensor
+    ``stacks.stack_rank_slab`` builds from R per-rank ``ExecutorPlan``
+    single-tensor views: every rank's retained triples, padded to one
+    traced shape.  Inside ``shard_map`` each rank selects its slice
+    with ``lax.dynamic_index_in_dim(slab, rank_index)`` — the traced
+    program is identical on every rank (SPMD-safe), but a rank executes
+    only ITS mask/norm-retained triples instead of the union plan.
+
+    The union-compatible statistics properties (``n_entries`` etc.)
+    report the MAX over ranks — the busiest rank bounds the step's wall
+    time, which is what schedule pricing and the planner consume.
+    Per-rank detail lives in ``rank_entries`` / ``rank_imbalance``.
+    """
+
+    slab: np.ndarray               # (R, S, T, 4) int32, read-only
+    n_c_blocks: int
+    block_m: int
+    block_k: int
+    block_n: int
+    nbr: int
+    nbk: int
+    nbc: int
+    rank_plans: Tuple[ExecutorPlan, ...]
+    filter_eps: Optional[float] = None
+
+    @property
+    def n_ranks(self) -> int:
+        return int(self.slab.shape[0])
+
+    @property
+    def n_stacks(self) -> int:
+        return int(self.slab.shape[1])
+
+    @property
+    def stack_tile(self) -> int:
+        return int(self.slab.shape[2])
+
+    @property
+    def rank_entries(self) -> Tuple[int, ...]:
+        """Retained (non-padding) triples each rank executes."""
+        return tuple(p.n_entries for p in self.rank_plans)
+
+    @property
+    def n_entries(self) -> int:
+        """Busiest rank's retained triples (the wall-time bound)."""
+        return max(self.rank_entries, default=0)
+
+    @property
+    def n_entries_mean(self) -> float:
+        e = self.rank_entries
+        return float(np.mean(e)) if e else 0.0
+
+    @property
+    def rank_imbalance(self) -> float:
+        """max/mean retained triples over ranks (1.0 = balanced)."""
+        mean = self.n_entries_mean
+        return float(self.n_entries) / mean if mean > 0 else 1.0
+
+    @property
+    def n_dense_triples(self) -> int:
+        return self.nbr * self.nbk * self.nbc
+
+    @property
+    def n_skipped_triples(self) -> int:
+        return self.n_dense_triples - self.n_entries
+
+    @property
+    def occupancy(self) -> float:
+        """Busiest rank's fraction of the dense local triple grid."""
+        dense = self.n_dense_triples
+        return self.n_entries / dense if dense else 1.0
+
+    @property
+    def n_padding(self) -> int:
+        """Padding rows the busiest-rank slab slice dispatches."""
+        return self.n_stacks * self.stack_tile - self.n_entries
+
+    @property
+    def n_padding_unbinned(self) -> int:
+        return self.n_padding
+
+    @property
+    def n_unfiltered_entries(self) -> Optional[int]:
+        vals = [p.n_unfiltered_entries for p in self.rank_plans]
+        if any(v is not None for v in vals):
+            return max(v if v is not None else p.n_entries
+                       for v, p in zip(vals, self.rank_plans))
+        return None
+
+    @property
+    def n_norm_filtered_triples(self) -> int:
+        return max((p.n_norm_filtered_triples for p in self.rank_plans),
+                   default=0)
+
+    @property
+    def uniform(self) -> bool:
+        """True when every rank's slab slice is content-identical —
+        the dense / uniform-fill regime where rank-exact execution
+        degenerates to the union plan."""
+        return bool((self.slab == self.slab[:1]).all())
+
+    def stats(self) -> dict:
+        s = {
+            "n_ranks": self.n_ranks,
+            "n_stacks": self.n_stacks,
+            "stack_tile": self.stack_tile,
+            "n_entries": self.n_entries,
+            "rank_entries": list(self.rank_entries),
+            "rank_entries_mean": self.n_entries_mean,
+            "rank_imbalance": self.rank_imbalance,
+            "n_dense_triples": self.n_dense_triples,
+            "occupancy": self.occupancy,
+            "n_padding": self.n_padding,
+            "filter_eps": self.filter_eps,
+        }
+        if obs.enabled():
+            obs.histogram("executor.rank_imbalance").observe(
+                self.rank_imbalance)
+        return s
+
+
+def build_rank_executor_plan(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    block_m: int,
+    block_k: int,
+    block_n: int,
+    rank_masks,
+    stack_size: int = STACK_SIZE,
+    filter_eps: Optional[float] = None,
+) -> RankExecutorPlan:
+    """Build R per-rank plans (memoized individually — identical ranks
+    share one cached ``ExecutorPlan``) and stack their padded triple
+    tensors into the rank slab.  ``rank_masks`` is a sequence of
+    per-rank mask/norm kwarg dicts (``a_mask``/``b_mask``/``pair_mask``
+    /``a_norms``/``b_norms``/``pair_norms``) on the LOCAL geometry, in
+    mesh-flattened rank order (the order the caller's rank_index
+    computes inside shard_map).
+
+    Per-rank plans are built with ``stack_bins=1``: size-binning would
+    give each rank a private bin structure, breaking the single traced
+    shape the slab requires.
+    """
+    plans = tuple(
+        build_executor_plan(m, k, n, block_m, block_k, block_n, stack_size,
+                            filter_eps=filter_eps, stack_bins=1, **rm)
+        for rm in rank_masks)
+    n_c = plans[0].n_c_blocks
+    slab = stack_rank_slab([p.triples for p in plans], n_c)
+    slab.setflags(write=False)
+    return RankExecutorPlan(
+        slab=slab,
+        n_c_blocks=n_c,
+        block_m=block_m,
+        block_k=block_k,
+        block_n=block_n,
+        nbr=plans[0].nbr,
+        nbk=plans[0].nbk,
+        nbc=plans[0].nbc,
+        rank_plans=plans,
+        filter_eps=filter_eps,
+    )
+
+
+def execute_rank_plan(
+    plan: RankExecutorPlan,
+    rank_index,
+    a_blocks: jax.Array,
+    b_blocks: jax.Array,
+    c_blocks: jax.Array,
+    *,
+    kernel: str = "smm",
+    align: bool = False,
+) -> jax.Array:
+    """``execute_plan``'s rank-exact twin: select this rank's slab slice
+    by the traced ``rank_index`` and scan only those stacks.
+
+    The program is shape-identical on every rank; only the gathered
+    triple VALUES differ, so the dispatch stays SPMD-safe under
+    ``shard_map``.  An all-empty slab (every rank's product absent)
+    returns ``c_blocks`` untouched.
+    """
+    if plan.n_stacks == 0 or max(plan.rank_entries, default=0) == 0:
+        return c_blocks
+    process = _resolve_process(kernel)
+    bm, bn = c_blocks.shape[1], c_blocks.shape[2]
+    if align and kernel == "smm":
+        from repro.kernels.smm.ops import mxu_pad_shape
+
+        bk = a_blocks.shape[2]
+        pm, pk, pn = mxu_pad_shape(bm, bk, bn, True)
+        if (pm, pk, pn) != (bm, bk, bn):
+            a_blocks = jnp.pad(a_blocks, ((0, 0), (0, pm - bm), (0, pk - bk)))
+            b_blocks = jnp.pad(b_blocks, ((0, 0), (0, pk - bk), (0, pn - bn)))
+            c_blocks = jnp.pad(c_blocks, ((0, 0), (0, pm - bm), (0, pn - bn)))
+        align = False
+    scratch = jnp.zeros((1,) + c_blocks.shape[1:], c_blocks.dtype)
+    c = jnp.concatenate([c_blocks, scratch], axis=0)
+    mine = jax.lax.dynamic_index_in_dim(
+        jnp.asarray(plan.slab), jnp.asarray(rank_index, jnp.int32),
+        axis=0, keepdims=False)
+
+    def step(c_carry, stack_triples):
+        return process(a_blocks, b_blocks, c_carry, stack_triples,
+                       align=align), None
+
+    c, _ = jax.lax.scan(step, c, mine)
+    c = c[:-1]
+    if c.shape[1:] != (bm, bn):
+        c = c[:, :bm, :bn]
+    return c
+
+
+def rank_stack_executor(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    block_m: int,
+    block_k: int,
+    block_n: int,
+    rank_masks,
+    rank_index_fn,
+    stack_size: Optional[int] = None,
+    align: Optional[bool] = None,
+    kernel: str = "smm",
+    filter_eps: Optional[float] = None,
+    stack_bins: Optional[int] = None,
+):
+    """``stack_executor``'s rank-exact twin for use inside ``shard_map``.
+
+    ``rank_index_fn`` is a zero-arg callable evaluated at trace time
+    inside the shard_map body, returning this rank's flat index into
+    ``rank_masks`` order (built from ``jax.lax.axis_index`` over the
+    mesh axes).  ``stack_size``/``align`` default to the autotune
+    winners resolved at the BUSIEST rank's fill, so every rank runs the
+    same tuned tile.
+
+    ``stack_bins`` is accepted for signature parity but rank slabs are
+    always single-bin (see ``build_rank_executor_plan``).
+    """
+    from repro.kernels.smm.autotune import best_params_for
+
+    nbr, nbk, nbc = m // block_m, k // block_k, n // block_n
+    fill = max(
+        _mask_fill(nbr, nbk, nbc,
+                   rm.get("a_mask"), rm.get("b_mask"), rm.get("pair_mask"),
+                   rm.get("a_norms"), rm.get("b_norms"),
+                   rm.get("pair_norms"), filter_eps)
+        for rm in rank_masks)
+    tuned_align, tuned_tile = best_params_for(block_m, block_k, block_n,
+                                              fill=fill)
+    if align is None:
+        align = tuned_align
+    if stack_size is None:
+        stack_size = tuned_tile
+    plan = build_rank_executor_plan(
+        m, k, n, block_m=block_m, block_k=block_k, block_n=block_n,
+        rank_masks=rank_masks, stack_size=stack_size,
+        filter_eps=filter_eps)
+
+    def f(a: jax.Array, b: jax.Array) -> jax.Array:
+        if a.shape != (m, k) or b.shape != (k, n):
+            raise ValueError(
+                f"rank stack executor built for ({m},{k}) x ({k},{n}), "
+                f"got {a.shape} x {b.shape}")
+        a_blocks = to_blocks(a, block_m, block_k)
+        b_blocks = to_blocks(b, block_k, block_n)
+        c_blocks = jnp.zeros((plan.nbr * plan.nbc, block_m, block_n),
+                             jnp.float32)
+        c_blocks = execute_rank_plan(plan, rank_index_fn(), a_blocks,
+                                     b_blocks, c_blocks, kernel=kernel,
+                                     align=align)
+        return from_blocks(c_blocks, plan.nbr, plan.nbc)
+
+    f.executor_plan = plan
+    f.rank_plan = plan
     f.align = align
     f.stack_size = stack_size
     return f

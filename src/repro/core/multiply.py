@@ -28,12 +28,31 @@ shift, each summa panel — the per-algorithm mask builders
 slice the global masks down to the block ranges every mesh rank holds
 at that step and union them over ranks (shard_map traces ONE program
 for all devices, so the per-step plan must cover every rank's present
-triples; the union is the tightest SPMD-uniform plan).  Plans are
-memoized per shifted-mask content fingerprint (core/engine.py), and a
-step whose unioned mask product is empty skips its ``execute_plan`` —
+triples; the union is the tightest SPMD-uniform *shared* plan).  Plans
+are memoized per shifted-mask content fingerprint (core/engine.py), and
+a step whose unioned mask product is empty skips its ``execute_plan`` —
 and for summa, the panel broadcast — entirely.  The densified path
 ignores the masks: absent blocks are stored as zeros, so one big GEMM
 is already correct.
+
+Rank-exact execution (default for masked/filtered blocked multi-rank
+paths; ``rank_exact=False`` restores the union): instead of one shared
+union plan per step, the per-rank builders (``cannon_rank_steps`` /
+``summa_rank_steps`` / ``ts_rank_steps``) emit each rank's EXACT
+mask/norm slice and the engine stacks the per-rank plans into one
+host-constant slab every rank indexes with ``jax.lax.axis_index``
+inside shard_map (core/engine.rank_stack_executor) — still one traced
+program, but a rank executes only its own retained triples, never the
+union's.  Per-step emptiness stays host-static as the all-ranks-empty
+intersection (identical to union emptiness: the max norm product over
+ranks clears eps iff some rank retains a triple).  Steps whose
+per-rank slices are content-identical (dense padding, uniform fill)
+collapse to the shared union executor, bitwise-identical to the legacy
+trace.  On top of that, the planner's costed permutation pass
+(repro.sparsity.balance) can permute block rows/cols of A/B before the
+multiply and invert the permutation on C, flattening per-rank load
+imbalance when the predicted compute saved exceeds the shuffle's cost
+(DBCSR's randomized-distribution trick, arXiv:1910.04796 sec. 2).
 """
 from __future__ import annotations
 
@@ -47,17 +66,19 @@ import numpy as np
 from repro import obs
 
 from .blocking import GridSpec
-from .cannon import (build_cannon_schedule, cannon_matmul, cannon_step_masks,
-                     cannon_step_norms)
+from .cannon import (build_cannon_schedule, cannon_matmul, cannon_rank_steps,
+                     cannon_step_masks, cannon_step_norms)
 from .cannon25d import build_cannon25d_schedule, cannon25d_matmul
 from .densify import blocked_local_matmul, densified_local_matmul
+from .engine import rank_stack_executor
 from .schedule import resolve_pipeline_depth, schedule_step_meta
 from .stacks import normalize_block_masks
 from .summa import (build_summa_gather_schedule, build_summa_schedule,
-                    summa_gather_masks, summa_gather_norms, summa_matmul,
-                    summa_n_panels, summa_step_masks, summa_step_norms)
+                    summa_gather_masks, summa_gather_norms,
+                    summa_gather_rank_steps, summa_matmul, summa_n_panels,
+                    summa_rank_steps, summa_step_masks, summa_step_norms)
 from .tall_skinny import (build_ts_schedule, tall_skinny_matmul,
-                          ts_step_masks, ts_step_norms)
+                          ts_rank_steps, ts_step_masks, ts_step_norms)
 
 __all__ = ["distributed_matmul"]
 
@@ -144,7 +165,7 @@ def _collect_executor_stats(lm, densify: bool) -> Optional[dict]:
         n_unfiltered = sum(
             p.n_entries if p.n_unfiltered_entries is None
             else p.n_unfiltered_entries for p in ex)
-        return {
+        stats = {
             "n_steps": len(lm.step_executors),
             "n_empty_steps": len(lm.empty_steps),
             "n_entries": n_entries,
@@ -159,8 +180,26 @@ def _collect_executor_stats(lm, densify: bool) -> Optional[dict]:
             "n_unfiltered_triples": n_unfiltered,
             "n_norm_filtered_triples": n_unfiltered - n_entries,
         }
+        totals = _rank_totals(lm)
+        if totals is not None:
+            # rank-exact accounting: the busiest rank's total bounds
+            # wall time; mean is the flattened-load floor rebalancing
+            # aims for (n_entries above already sums per-step maxima)
+            stats.update(
+                rank_exact=True,
+                rank_entries=[int(x) for x in totals],
+                max_rank_entries=int(totals.max()),
+                mean_rank_entries=float(totals.mean()),
+                rank_imbalance=_rank_imbalance_of(totals),
+            )
+        return stats
     plan = getattr(lm, "executor_plan", None)
-    return None if plan is None else plan.stats()
+    if plan is None:
+        return None
+    stats = plan.stats()
+    if hasattr(plan, "rank_entries"):
+        stats["rank_exact"] = True
+    return stats
 
 
 def _stepwise_blocked_lm(
@@ -188,6 +227,130 @@ def _stepwise_blocked_lm(
     lm.empty_steps = frozenset(empty)
     lm.step_executors = fns
     return lm
+
+
+# ---------------------------------------------------------------------------
+# rank-exact execution (ISSUE 9): per-rank plan slabs + costed rebalance
+# ---------------------------------------------------------------------------
+
+
+def _rank_kwargs_equal(rank_kwargs: List[dict]) -> bool:
+    """True when every rank's step kwargs are content-identical — the
+    dense / uniform-fill collapse: one shared plan IS every rank's
+    exact plan, so the union executor (today's trace) already executes
+    rank-exactly and we keep its bitwise-identical program."""
+    first = rank_kwargs[0]
+    keys = set(first)
+    for rk in rank_kwargs[1:]:
+        if set(rk) != keys:
+            return False
+        for key in keys:
+            u, v = first[key], rk[key]
+            if u is None or v is None:
+                if u is not v:
+                    return False
+            elif u.shape != v.shape or not np.array_equal(u, v):
+                return False
+    return True
+
+
+def _rank_index_fn(algorithm: str, grid: GridSpec, mesh):
+    """Zero-arg closure returning this rank's traced flat index inside
+    the shard_map body (``jax.lax.axis_index`` over the mesh axes),
+    matching the rank orderings the per-rank step builders emit:
+    cannon ``i*pg + j``; cannon25d / stacked tall-skinny stack-major
+    ``(s*pr + i)*pc + j``; summa / flat tall-skinny ``i*pc + j``."""
+    pr, pc = grid.grid_shape(mesh)
+    row, col = grid.row_axis, grid.col_axis
+    stacked = (algorithm == "cannon25d"
+               or (algorithm.startswith("ts_")
+                   and grid.stack_axis is not None))
+    if stacked:
+        stack = grid.stack_axis
+        return lambda: ((jax.lax.axis_index(stack) * pr
+                         + jax.lax.axis_index(row)) * pc
+                        + jax.lax.axis_index(col))
+    return lambda: jax.lax.axis_index(row) * pc + jax.lax.axis_index(col)
+
+
+def _single_rank_lm(ml: int, kl: int, nl: int, *, rank_kwargs: List[dict],
+                    rank_index_fn, filter_eps: Optional[float] = None,
+                    **blocked_kw):
+    """Rank-exact local multiply for single-plan schedules (tall-skinny,
+    summa with the gather broadcast): one slab executor, or the union
+    ``blocked_local_matmul`` when every rank's slice is identical."""
+    if _rank_kwargs_equal(rank_kwargs):
+        return blocked_local_matmul(ml, kl, nl, **rank_kwargs[0],
+                                    filter_eps=filter_eps, **blocked_kw)
+    return rank_stack_executor(ml, kl, nl, rank_masks=rank_kwargs,
+                               rank_index_fn=rank_index_fn,
+                               filter_eps=filter_eps, **blocked_kw)
+
+
+def _stepwise_rank_blocked_lm(
+    ml: int, kl: int, nl: int, *, rank_steps: List[List[dict]],
+    rank_index_fn, filter_eps: Optional[float] = None, **blocked_kw,
+):
+    """Rank-exact stepwise local multiply: one stacked per-rank slab
+    executor per data-exchange step (core/engine.rank_stack_executor).
+
+    Step emptiness stays HOST-STATIC as the all-ranks-empty
+    intersection — ``max_r norm_product >= eps`` iff some rank retains
+    a triple, so this is exactly the union path's per-step skip set and
+    the comm schedule stays SPMD-uniform.  A step whose per-rank slices
+    are content-identical (uniform fill) collapses to the shared union
+    executor, bitwise-identical to the legacy trace."""
+    fns, empty = [], set()
+    for t, rkw in enumerate(rank_steps):
+        if all(_masks_empty({**r, "filter_eps": filter_eps}) for r in rkw):
+            fns.append(None)
+            empty.add(t)
+        elif _rank_kwargs_equal(rkw):
+            fns.append(blocked_local_matmul(
+                ml, kl, nl, **rkw[0], filter_eps=filter_eps, **blocked_kw))
+        else:
+            fns.append(rank_stack_executor(
+                ml, kl, nl, rank_masks=rkw, rank_index_fn=rank_index_fn,
+                filter_eps=filter_eps, **blocked_kw))
+
+    def lm(a_loc: jax.Array, b_loc: jax.Array, step: int = 0):
+        f = fns[step]
+        return None if f is None else f(a_loc, b_loc)
+
+    lm.stepwise = True
+    lm.empty_steps = frozenset(empty)
+    lm.step_executors = fns
+    return lm
+
+
+def _rank_totals(lm) -> Optional[np.ndarray]:
+    """Per-rank executed-entry totals over the whole multiply (summed
+    across steps; collapsed/union steps charge every rank the shared
+    plan's entries).  None when no step executed rank-exactly."""
+    fns = getattr(lm, "step_executors", None)
+    if fns is None:
+        fns = [lm]
+    plans = [getattr(f, "executor_plan", None)
+             for f in fns if f is not None]
+    ranked = [p for p in plans if hasattr(p, "rank_entries")]
+    if not ranked:
+        return None
+    totals = np.zeros(ranked[0].n_ranks, dtype=np.int64)
+    for p in plans:
+        if p is None:
+            continue
+        if hasattr(p, "rank_entries"):
+            totals += np.asarray(p.rank_entries, dtype=np.int64)
+        else:
+            totals += int(p.n_entries)
+    return totals
+
+
+def _rank_imbalance_of(totals: Optional[np.ndarray]) -> Optional[float]:
+    if totals is None:
+        return None
+    mean = float(totals.mean())
+    return float(totals.max()) / mean if mean > 0 else 1.0
 
 
 # ---------------------------------------------------------------------------
@@ -273,6 +436,7 @@ def _schedule_stats(algorithm: str, *, grid, mesh, local_shape, itemsize,
             flops = dense_flops
             compute_s = flops / hw.flops_per_s
         n_dense = getattr(plan, "n_dense_triples", None)
+        ranked = plan is not None and hasattr(plan, "rank_entries")
         steps.append({
             "step": t,
             "skipped": t in empty,
@@ -283,6 +447,12 @@ def _schedule_stats(algorithm: str, *, grid, mesh, local_shape, itemsize,
             "n_entries": None if plan is None else int(plan.n_entries),
             "occupancy": (plan.n_entries / n_dense
                           if plan is not None and n_dense else None),
+            # rank-exact steps: the per-rank retained counts behind the
+            # busiest-rank n_entries above (None on union/collapsed)
+            "rank_entries": (list(map(int, plan.rank_entries))
+                             if ranked else None),
+            "rank_imbalance": (float(plan.rank_imbalance)
+                               if ranked else None),
         })
     comm_s = sum(s["comm_s"] for s in steps)
     compute_s = sum(s["compute_s"] for s in steps)
@@ -339,7 +509,9 @@ def _emit_step_spans(parent, t0: float, total_s: float, ss: dict) -> None:
             attrs={"step": s["step"], "skipped": s["skipped"],
                    "comm_bytes": s["comm_bytes"], "flops": s["flops"],
                    "occupancy": s.get("occupancy"),
-                   "n_entries": s.get("n_entries")})
+                   "n_entries": s.get("n_entries"),
+                   "rank_entries": s.get("rank_entries"),
+                   "rank_imbalance": s.get("rank_imbalance")})
         if s["comm_s"] > 0.0:
             tracer.emit("comm", "comm", t0=cur, dur=s["comm_s"] * scale,
                         parent=srec,
@@ -428,6 +600,8 @@ def distributed_matmul(
     b_norms: Optional[np.ndarray] = None,
     filter_eps: Optional[float] = None,
     stack_bins: Optional[int] = None,
+    rank_exact: Optional[bool] = None,
+    rebalance: Optional[bool] = None,
     precision=jax.lax.Precision.DEFAULT,
     pipeline_depth: Optional[int] = None,
     double_buffer: Optional[bool] = None,
@@ -477,6 +651,24 @@ def distributed_matmul(
     caps the stack executor's size-bin count (core/engine.py;
     DBCSR_STACK_BINS env overrides the default 4).
 
+    Rank-exact execution (module docstring): ``rank_exact=None`` (the
+    default) runs every masked/filtered blocked multi-rank step from a
+    stacked per-rank plan slab — each rank executes exactly its own
+    retained triples, selected by ``axis_index`` inside shard_map —
+    while ``False`` restores the legacy union-of-ranks plan and
+    ``True`` forces per-rank slabs even when auto would collapse.
+    Dense and uniform-fill steps collapse to the union executor
+    bitwise; with ``filter_eps > 0`` the per-rank norm filter is
+    EXACT per rank (the union applies the max norm product over
+    ranks, so it under-filters).  ``rebalance`` controls the costed
+    block-row/col permutation pass (repro.sparsity.balance): ``None``
+    defers to the planner (applied only when the predicted compute
+    saved by flattening per-rank load imbalance exceeds the shuffle's
+    amortized cost — ``plan.rebalance``), ``True`` forces it,
+    ``False`` disables it.  The permutation touches only block rows of
+    A/C and block cols of B/C (never K: that would reorder every C
+    block's accumulation), and is inverted on C before returning.
+
     ``pipeline_depth`` (core/schedule.py): 2 = double-buffered
     comm/compute overlap, 1 = serial (bit-identical output), 0 = rolled
     fori_loop ablation; ``None`` takes the plan's depth under ``auto``
@@ -519,7 +711,8 @@ def distributed_matmul(
         block_m=block_m, block_k=block_k, block_n=block_n,
         stack_size=stack_size, align=align, local_kernel=local_kernel,
         a_mask=a_mask, b_mask=b_mask, a_norms=a_norms, b_norms=b_norms,
-        filter_eps=filter_eps, stack_bins=stack_bins, precision=precision,
+        filter_eps=filter_eps, stack_bins=stack_bins,
+        rank_exact=rank_exact, rebalance=rebalance, precision=precision,
         pipeline_depth=pipeline_depth, double_buffer=double_buffer,
         verify=verify, verify_budget=verify_budget,
         return_plan=return_plan, **kw)
@@ -553,6 +746,8 @@ def _distributed_matmul(
     b_norms: Optional[np.ndarray] = None,
     filter_eps: Optional[float] = None,
     stack_bins: Optional[int] = None,
+    rank_exact: Optional[bool] = None,
+    rebalance: Optional[bool] = None,
     precision=jax.lax.Precision.DEFAULT,
     pipeline_depth: Optional[int] = None,
     double_buffer: Optional[bool] = None,
@@ -582,6 +777,38 @@ def _distributed_matmul(
         a_norms = block_norms_of(a, block_m, block_k, a_mask)
         b_norms = block_norms_of(b, block_k, block_n, b_mask)
 
+    # ---- global mask/norm normalisation + rank-exact resolution -------
+    # (hoisted above planning: the per-rank load imbalance of the
+    # C-chunk decomposition feeds the planner's rank-exact pricing and
+    # its costed rebalance decision)
+    pr0, pc0 = grid.grid_shape(mesh)
+    n_ranks_all = pr0 * pc0 * (1 if grid.stack_axis is None
+                               else grid.stack_size(mesh))
+    masked = a_mask is not None or b_mask is not None or filtering
+    am = bmk = an_g = bn_g = None
+    if masked:
+        am, bmk = _block_masks(m, k, n, block_m, block_k, block_n,
+                               a_mask, b_mask)
+        if filtering:
+            # norms ride the same slicing machinery as the masks;
+            # mask-absent blocks are forced to norm 0 so one >= eps
+            # comparison folds both criteria per rank
+            from repro.sparsity.norms import normalize_block_norms
+
+            an_g, bn_g = normalize_block_norms(
+                am.shape[0], am.shape[1], bmk.shape[1], a_norms, b_norms)
+            an_g = np.where(am, an_g, np.float32(0.0))
+            bn_g = np.where(bmk, bn_g, np.float32(0.0))
+    use_rank = rank_exact is not False and masked and n_ranks_all > 1
+    rank_imb = None
+    if use_rank and am.shape[0] % pr0 == 0 and bmk.shape[1] % pc0 == 0:
+        from repro.sparsity.balance import (chunk_imbalance,
+                                            retained_block_weights)
+
+        rank_imb = chunk_imbalance(
+            retained_block_weights(am, bmk, an_g, bn_g, filter_eps),
+            pr0, pc0)
+
     plan = None
     # telemetry forces a plan even for pinned algorithms: the planner
     # scoreboard needs predicted_s for every executed plan
@@ -589,7 +816,6 @@ def _distributed_matmul(
         from repro.planner.plan import plan_multiply
 
         with obs.maybe_span(_tele, "plan", cat="plan") as psp:
-            pr0, pc0 = grid.grid_shape(mesh)
             mesh_shape = ((pr0, pc0) if grid.stack_axis is None
                           else (pr0, pc0, grid.stack_size(mesh)))
             occ = _global_occupancy(m, k, n, block_m, block_k, block_n,
@@ -614,7 +840,8 @@ def _distributed_matmul(
                 densify=(densify
                          if algorithm == "auto" or densify is not None
                          else True),
-                stack_size=stack_size, align=align)
+                stack_size=stack_size, align=align,
+                rank_imbalance=rank_imb)
             if algorithm == "auto":
                 algorithm = plan.algorithm
                 if densify is None:
@@ -636,6 +863,41 @@ def _distributed_matmul(
                         "summa"):
         raise ValueError(f"unknown algorithm {algorithm!r}")
     depth = resolve_pipeline_depth(pipeline_depth, double_buffer)
+
+    # ---- costed rebalance: permute the block distribution -------------
+    # The planner arms this only when predicted compute saved by
+    # flattening per-rank load imbalance exceeds the shuffle's amortized
+    # cost (plan.rebalance); ``rebalance=True/False`` overrides.  Only
+    # block rows of A/C and block cols of B/C move — K stays identity so
+    # every C block keeps its accumulation order — and the inverse
+    # permutation is applied to C inside the re-runnable dispatch
+    # closure (ABFT repair re-executions stay self-consistent).
+    rb = None
+    do_rebalance = (rebalance if rebalance is not None
+                    else plan is not None and plan.rebalance)
+    if (do_rebalance and not densify and use_rank
+            and am.shape[0] % pr0 == 0 and bmk.shape[1] % pc0 == 0):
+        from repro.sparsity.balance import plan_rebalance
+
+        cand = plan_rebalance(am, bmk, pr0, pc0, a_norms=an_g,
+                              b_norms=bn_g, filter_eps=filter_eps)
+        if not cand.identity:
+            rb = cand
+    a_exec, b_exec = a, b
+    if rb is not None:
+        from repro.sparsity.balance import (permute_block_cols,
+                                            permute_block_rows)
+
+        pm_idx, pn_idx = np.asarray(rb.perm_m), np.asarray(rb.perm_n)
+        a_exec = permute_block_rows(a, rb.perm_m, block_m)
+        b_exec = permute_block_cols(b, rb.perm_n, block_n)
+        am = am[pm_idx]
+        bmk = bmk[:, pn_idx]
+        if an_g is not None:
+            an_g = an_g[pm_idx]
+        if bn_g is not None:
+            bn_g = bn_g[:, pn_idx]
+        obs.counter("planner.rebalance.applied").inc()
 
     # ---- local multiply geometry (per schedule step) ------------------
     pr, pc = grid.grid_shape(mesh)
@@ -688,26 +950,19 @@ def _distributed_matmul(
             block_m=block_m, block_k=block_k, block_n=block_n,
             stack_size=stack_size, align=align,
             kernel=local_kernel or "smm", stack_bins=stack_bins)
-        if a_mask is None and b_mask is None and not filtering:
+        if not masked:
             lm = blocked_local_matmul(ml, kl, nl, **blocked_kw)
-        else:
-            am, bmk = _block_masks(m, k, n, block_m, block_k, block_n,
-                                   a_mask, b_mask)
-            an_g = bn_g = None
-            if filtering:
-                # norms ride the same slicing machinery as the masks;
-                # mask-absent blocks are forced to norm 0 so one >= eps
-                # comparison folds both criteria per rank
-                from repro.sparsity.norms import normalize_block_norms
-
-                an_g, bn_g = normalize_block_norms(
-                    am.shape[0], am.shape[1], bmk.shape[1],
-                    a_norms, b_norms)
-                an_g = np.where(am, an_g, np.float32(0.0))
-                bn_g = np.where(bmk, bn_g, np.float32(0.0))
-            if algorithm in ("cannon", "cannon25d"):
-                c_repl = (grid.stack_size(mesh)
-                          if algorithm == "cannon25d" else 1)
+        elif algorithm in ("cannon", "cannon25d"):
+            c_repl = (grid.stack_size(mesh)
+                      if algorithm == "cannon25d" else 1)
+            if use_rank:
+                lm = _stepwise_rank_blocked_lm(
+                    ml, kl, nl,
+                    rank_steps=cannon_rank_steps(
+                        am, bmk, pg, c_repl, a_norms=an_g, b_norms=bn_g),
+                    rank_index_fn=_rank_index_fn(algorithm, grid, mesh),
+                    filter_eps=filter_eps, **blocked_kw)
+            else:
                 steps = [{"pair_mask": pm}
                          for pm in cannon_step_masks(am, bmk, pg, c_repl)]
                 if filtering:
@@ -716,7 +971,16 @@ def _distributed_matmul(
                         s.update(pair_norms=pn, filter_eps=filter_eps)
                 lm = _stepwise_blocked_lm(ml, kl, nl, mask_steps=steps,
                                           **blocked_kw)
-            elif algorithm == "summa" and kw.get("bcast") != "gather":
+        elif algorithm == "summa" and kw.get("bcast") != "gather":
+            if use_rank:
+                lm = _stepwise_rank_blocked_lm(
+                    ml, kl, nl,
+                    rank_steps=summa_rank_steps(
+                        am, bmk, pr, pc, n_panels,
+                        a_norms=an_g, b_norms=bn_g),
+                    rank_index_fn=_rank_index_fn(algorithm, grid, mesh),
+                    filter_eps=filter_eps, **blocked_kw)
+            else:
                 steps = [{"a_mask": ua, "b_mask": ub} for ua, ub in
                          summa_step_masks(am, bmk, pr, pc, n_panels)]
                 if filtering:
@@ -726,7 +990,15 @@ def _distributed_matmul(
                                  filter_eps=filter_eps)
                 lm = _stepwise_blocked_lm(ml, kl, nl, mask_steps=steps,
                                           **blocked_kw)
-            elif algorithm == "summa":
+        elif algorithm == "summa":
+            if use_rank:
+                lm = _single_rank_lm(
+                    ml, kl, nl,
+                    rank_kwargs=summa_gather_rank_steps(
+                        am, bmk, pr, pc, a_norms=an_g, b_norms=bn_g),
+                    rank_index_fn=_rank_index_fn(algorithm, grid, mesh),
+                    filter_eps=filter_eps, **blocked_kw)
+            else:
                 ua, ub = summa_gather_masks(am, bmk, pr, pc)
                 norm_kw = {}
                 if filtering:
@@ -735,6 +1007,15 @@ def _distributed_matmul(
                                    filter_eps=filter_eps)
                 lm = blocked_local_matmul(ml, kl, nl, a_mask=ua, b_mask=ub,
                                           **norm_kw, **blocked_kw)
+        else:
+            if use_rank:
+                lm = _single_rank_lm(
+                    ml, kl, nl,
+                    rank_kwargs=ts_rank_steps(
+                        algorithm, am, bmk, p_all,
+                        a_norms=an_g, b_norms=bn_g),
+                    rank_index_fn=_rank_index_fn(algorithm, grid, mesh),
+                    filter_eps=filter_eps, **blocked_kw)
             else:
                 norm_kw = {}
                 if filtering:
@@ -744,6 +1025,10 @@ def _distributed_matmul(
                 lm = blocked_local_matmul(
                     ml, kl, nl, **ts_step_masks(algorithm, am, bmk, p_all),
                     **norm_kw, **blocked_kw)
+    if not densify and obs.enabled():
+        imb = _rank_imbalance_of(_rank_totals(lm))
+        if imb is not None:
+            obs.histogram("executor.rank_imbalance").observe(imb)
 
     # ---- data-exchange algorithm (all via the schedule engine) --------
     # The dispatch is wrapped in a re-runnable closure: at a fixed
@@ -752,20 +1037,29 @@ def _distributed_matmul(
     # bitwise equal to a clean run.
     def _run():
         if algorithm == "cannon":
-            return cannon_matmul(
-                a, b, mesh=mesh, grid=grid, local_matmul=lm,
+            c = cannon_matmul(
+                a_exec, b_exec, mesh=mesh, grid=grid, local_matmul=lm,
                 precision=precision, pipeline_depth=depth, **kw)
-        if algorithm == "cannon25d":
-            return cannon25d_matmul(
-                a, b, mesh=mesh, grid=grid, local_matmul=lm,
+        elif algorithm == "cannon25d":
+            c = cannon25d_matmul(
+                a_exec, b_exec, mesh=mesh, grid=grid, local_matmul=lm,
                 precision=precision, pipeline_depth=depth, **kw)
-        if algorithm in ("ts_k", "ts_m", "ts_n"):
-            return tall_skinny_matmul(
-                a, b, mesh=mesh, grid=grid, mode=algorithm, local_matmul=lm,
+        elif algorithm in ("ts_k", "ts_m", "ts_n"):
+            c = tall_skinny_matmul(
+                a_exec, b_exec, mesh=mesh, grid=grid, mode=algorithm,
+                local_matmul=lm, precision=precision, pipeline_depth=depth,
+                **kw)
+        else:
+            c = summa_matmul(
+                a_exec, b_exec, mesh=mesh, grid=grid, local_matmul=lm,
                 precision=precision, pipeline_depth=depth, **kw)
-        return summa_matmul(
-            a, b, mesh=mesh, grid=grid, local_matmul=lm,
-            precision=precision, pipeline_depth=depth, **kw)
+        if rb is not None:
+            from repro.sparsity.balance import (permute_block_cols,
+                                                permute_block_rows)
+
+            c = permute_block_rows(c, rb.inv_m, block_m)
+            c = permute_block_cols(c, rb.inv_n, block_n)
+        return c
 
     sched_stats_cache = [None]
 
@@ -823,9 +1117,16 @@ def _distributed_matmul(
         return c
     import dataclasses as _dc
 
+    es = _collect_executor_stats(lm, densify)
+    if es is not None:
+        es["rebalance_applied"] = rb is not None
+        if rb is not None:
+            es["rebalance_method"] = rb.method
+            es["rebalance_imbalance_before"] = rb.imbalance_before
+            es["rebalance_imbalance_after"] = rb.imbalance_after
     plan = _dc.replace(
         plan,
-        executor_stats=_collect_executor_stats(lm, densify),
+        executor_stats=es,
         schedule_stats=_sched_stats(),
         verification=verification)
     return c, plan

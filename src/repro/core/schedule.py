@@ -33,9 +33,14 @@ Each algorithm module exports a pure *schedule builder* that returns a
 
 plus static metadata: ``n_steps``, the host-static ``empty_steps`` set
 (steps whose occupancy-mask product is empty on every rank — SPMD-safe
-to skip because it is uniform across devices), per-step ``comm_op``
-labels and ``step_comm_bytes`` estimates for observability, and an
-optional ``rolled`` spec for the fori_loop ablation form.
+to skip because it is uniform across devices; under rank-exact
+execution this is the ALL-ranks-empty intersection, which equals the
+union plan's emptiness because the max norm product over ranks clears
+``filter_eps`` iff some rank retains a triple — so the comm schedule
+is identical whether the local multiply runs union or per-rank plans),
+per-step ``comm_op`` labels and ``step_comm_bytes`` estimates for
+observability, and an optional ``rolled`` spec for the fori_loop
+ablation form.
 
 ``execute_schedule`` runs any schedule with software double-buffering:
 

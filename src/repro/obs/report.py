@@ -86,8 +86,9 @@ def render_timeline(spans: Sequence[SpanRecord], *,
 
     def _attrs(s: SpanRecord) -> str:
         keys = ("algorithm", "comm_bytes", "flops", "occupancy",
-                "skipped", "detected", "repaired")
-        parts = [f"{k}={s.attrs[k]}" for k in keys if k in s.attrs]
+                "rank_imbalance", "skipped", "detected", "repaired")
+        parts = [f"{k}={s.attrs[k]}" for k in keys
+                 if s.attrs.get(k) is not None]
         return ("  [" + " ".join(parts) + "]") if parts else ""
 
     def _walk(parent_id: Optional[int], depth: int) -> None:

@@ -76,6 +76,7 @@ __all__ = [
     "verify_overhead_s",
     "enumerate_candidates",
     "feasible",
+    "rebalance_cost_s",
     "overlap_efficiency",
     "algorithm_steps",
     "ts_crossover_ratio",
@@ -204,6 +205,11 @@ class CandidateCost:
     overlap_s: float        # comm hidden behind compute (subtracted)
     mem_bytes: float
     total_s: float
+    # rank-exact pricing: the per-rank load imbalance (max/mean retained
+    # triples) the blocked compute was charged under — 1.0 when the
+    # candidate is densified, imbalance-free, or priced by the legacy
+    # union model
+    imbalance: float = 1.0
 
     @property
     def label(self) -> str:
@@ -291,15 +297,22 @@ def _local_step_cost(hw: HardwareModel, prob: Problem, densify: bool,
                      ml: int, kl: int, nl: int,
                      stack_tile: Optional[int],
                      smm_flops_per_s: Optional[float],
-                     union_ranks: int = 1):
+                     union_ranks: int = 1,
+                     rank_max_occ: Optional[float] = None):
     """(compute_s, overhead_s, reason) of ONE local multiply step.
 
-    ``union_ranks`` models the SPMD-uniform plan contract
-    (core/multiply.py): each data-exchange step executes the UNION of
-    the present triples of every rank sharing the traced program, so
-    the executed occupancy is ``1 - (1 - occ)^R`` for R unioned ranks —
-    substantially above the global triple fill at moderate sparsity
-    (per-rank exact plans are future work, see ROADMAP).
+    ``union_ranks`` models the legacy SPMD union-plan contract
+    (core/multiply.py with ``rank_exact=False``): each data-exchange
+    step executes the UNION of the present triples of every rank
+    sharing the traced program, so the executed occupancy is
+    ``1 - (1 - occ)^R`` for R unioned ranks — substantially above the
+    global triple fill at moderate sparsity.
+
+    ``rank_max_occ`` switches to rank-exact pricing (core/engine.py
+    rank slabs): each rank executes only its own retained triples, and
+    a step's wall time is bounded by the BUSIEST rank, so compute is
+    charged as ``max_rank(retained_flops)`` — the mean occupancy times
+    the measured per-rank imbalance, never union-inflated.
     """
     e = prob.itemsize
     if densify:
@@ -318,7 +331,10 @@ def _local_step_cost(hw: HardwareModel, prob: Problem, densify: bool,
         raise ValueError(
             "blocked-path cost undefined at zero occupancy; callers must "
             "short-circuit an empty mask product to a trivial plan")
-    if occ < 1.0 and union_ranks > 1:
+    if rank_max_occ is not None:
+        # rank-exact execution: charge the busiest rank's retained fill
+        occ = min(max(float(rank_max_occ), 1e-12), 1.0)
+    elif occ < 1.0 and union_ranks > 1:
         occ = 1.0 - (1.0 - occ) ** union_ranks
     dense_triples = (ml // bm) * (kl // bk) * (nl // bn)
     present = occ * dense_triples
@@ -344,6 +360,7 @@ def candidate_cost(
     stack_tile: Optional[int] = None,
     smm_flops_per_s: Optional[float] = None,
     pipeline_depth: int = 2,
+    rank_imbalance: Optional[float] = None,
 ) -> CandidateCost:
     """Predicted execution cost of one candidate configuration.
 
@@ -353,7 +370,10 @@ def candidate_cost(
     ``pipeline_depth`` mirrors the schedule engine's knob: depth >= 2
     applies the calibrated per-algorithm overlap discount to the
     pipelined communication (the driver's default); depth 1 predicts
-    the serial loop.
+    the serial loop.  ``rank_imbalance`` (max/mean per-rank retained
+    triples, from the caller's mask decomposition) switches the blocked
+    compute charge from the legacy union inflation to rank-exact
+    max-rank pricing: ``occ * imbalance`` capped at 1.
     """
     global N_EVALS
     N_EVALS += 1
@@ -370,9 +390,14 @@ def candidate_cost(
                    "summa": prob.pr * prob.pc,
                    "summa_gather": prob.pr * prob.pc}.get(algorithm,
                                                          prob.p_all)
+    rank_max_occ = None
+    imbalance = 1.0
+    if rank_imbalance is not None and not densify:
+        imbalance = max(float(rank_imbalance), 1.0)
+        rank_max_occ = min(prob.occupancy * imbalance, 1.0)
     compute_1, overhead_1, reason = _local_step_cost(
         hw, prob, densify, ml, kl, nl, stack_tile, smm_flops_per_s,
-        union_ranks)
+        union_ranks, rank_max_occ)
     if reason is not None:
         return _infeasible(algorithm, densify, c_repl, reason)
     compute_s = steps * compute_1
@@ -469,9 +494,11 @@ def candidate_cost(
         return CandidateCost(
             algorithm, densify, c_repl, False,
             f"needs {mem / 1e9:.2f} GB/device > {hw.mem_bytes / 1e9:.2f} GB",
-            comm_s, compute_s, overhead_s, overlap_s, mem, total)
+            comm_s, compute_s, overhead_s, overlap_s, mem, total,
+            imbalance=imbalance)
     return CandidateCost(algorithm, densify, c_repl, True, "",
-                         comm_s, compute_s, overhead_s, overlap_s, mem, total)
+                         comm_s, compute_s, overhead_s, overlap_s, mem, total,
+                         imbalance=imbalance)
 
 
 def batched_dispatch_cost(
@@ -566,6 +593,7 @@ def enumerate_candidates(
     stack_tile: Optional[int] = None,
     smm_flops_per_s: Optional[float] = None,
     pipeline_depth: int = 2,
+    rank_imbalance: Optional[float] = None,
 ) -> Tuple[CandidateCost, ...]:
     """Cost every candidate in the (algorithm x local-path x c) space,
     optionally constrained to a forced algorithm / local path."""
@@ -580,8 +608,19 @@ def enumerate_candidates(
                 out.append(candidate_cost(
                     hw, prob, algo, dens, cr, stack_tile=stack_tile,
                     smm_flops_per_s=smm_flops_per_s,
-                    pipeline_depth=pipeline_depth))
+                    pipeline_depth=pipeline_depth,
+                    rank_imbalance=rank_imbalance))
     return tuple(out)
+
+
+def rebalance_cost_s(hw: HardwareModel, prob: Problem) -> float:
+    """Amortized price of the load-balancing permutation pass
+    (sparsity/balance.py): one block-row shuffle of A, one block-col
+    shuffle of B, and the inverse row+col shuffle of C — four payload
+    passes priced at the host copy bandwidth, plus one dispatch."""
+    e = prob.itemsize
+    passes = (prob.m * prob.k + prob.k * prob.n + 2.0 * prob.m * prob.n) * e
+    return passes / hw.densify_bytes_per_s + hw.dispatch_s
 
 
 def ts_crossover_ratio(hw: Optional[HardwareModel] = None,

@@ -37,7 +37,8 @@ import numpy as np
 from .cost_model import (BATCHED_ALGORITHMS, CandidateCost, HardwareModel,
                          Problem, algorithm_steps, batched_dispatch_cost,
                          candidate_cost, enumerate_candidates, feasible,
-                         overlap_efficiency, verify_overhead_s)
+                         overlap_efficiency, rebalance_cost_s,
+                         verify_overhead_s)
 
 __all__ = ["MultiplyPlan", "BatchedMultiplyPlan", "plan_multiply",
            "plan_multiply_batched", "decide_verify", "plan_cache_info",
@@ -81,6 +82,15 @@ class MultiplyPlan:
     # stats above — cached plan objects stay verification-free): pricing
     # from decide_verify plus the VerificationReport when it ran
     verification: Optional[dict] = None
+    # rank-exact pricing (ISSUE 9): the per-rank retained-triple
+    # imbalance (max/mean) the blocked candidates were charged under,
+    # and the costed permutation-pass decision (sparsity/balance.py) —
+    # rebalance is selected iff the compute the flattened imbalance
+    # saves exceeds the permutation's amortized cost
+    rank_imbalance: float = 1.0
+    rebalance: bool = False
+    rebalance_saved_s: float = 0.0
+    rebalance_cost_s: float = 0.0
 
     @property
     def chosen(self) -> Optional[CandidateCost]:
@@ -104,16 +114,24 @@ class MultiplyPlan:
         if self.stack_tile is not None:
             head += (f"\n  stack params: align={self.align} "
                      f"stack_tile={self.stack_tile} [{self.params_source}]")
+        if self.rank_imbalance > 1.0 or self.rebalance:
+            verdict = ("applied" if self.rebalance else "declined")
+            head += (f"\n  rank imbalance: {self.rank_imbalance:.2f} "
+                     f"rebalance={verdict} "
+                     f"(saves {self.rebalance_saved_s * 1e3:.3g} ms vs "
+                     f"{self.rebalance_cost_s * 1e3:.3g} ms permute cost)")
         lines = [head,
                  f"  {'candidate':26s} {'comm_ms':>9s} {'compute_ms':>11s} "
-                 f"{'overhead_ms':>12s} {'overlap_ms':>11s} {'total_ms':>9s}"]
+                 f"{'overhead_ms':>12s} {'overlap_ms':>11s} {'total_ms':>9s} "
+                 f"{'imbal':>6s}"]
         for c in sorted(self.candidates, key=lambda c: c.total_s):
             star = "*" if c is self.chosen else " "
             if c.feasible:
                 lines.append(
                     f"{star} {c.label:26s} {c.comm_s * 1e3:9.3f} "
                     f"{c.compute_s * 1e3:11.3f} {c.overhead_s * 1e3:12.3f} "
-                    f"{-c.overlap_s * 1e3:11.3f} {c.total_s * 1e3:9.3f}")
+                    f"{-c.overlap_s * 1e3:11.3f} {c.total_s * 1e3:9.3f} "
+                    f"{c.imbalance:6.2f}")
             else:
                 lines.append(f"{star} {c.label:26s} {'-':>9s} {'-':>11s} "
                              f"{'-':>12s} {'-':>11s} {'-':>9s}  "
@@ -187,6 +205,7 @@ def _plan_cached(
     stack_size: Optional[int], align: Optional[bool],
     hw: HardwareModel,
     winners_stamp=None,
+    rank_imbalance: Optional[float] = None,
 ) -> MultiplyPlan:
     prob = Problem(m, k, n, block_m, block_k, block_n, occupancy,
                    itemsize, pr, pc, c_stack)
@@ -203,7 +222,8 @@ def _plan_cached(
 
     candidates = enumerate_candidates(
         hw, prob, algorithm, densify,
-        stack_tile=tuned_tile, smm_flops_per_s=smm_rate)
+        stack_tile=tuned_tile, smm_flops_per_s=smm_rate,
+        rank_imbalance=rank_imbalance)
     ranked = sorted([c for c in candidates if c.feasible],
                     key=lambda c: c.total_s)
     if not ranked:
@@ -223,6 +243,18 @@ def _plan_cached(
         raise ValueError(f"no feasible multiply candidate — {reasons}")
 
     blocked = not best.densify
+    # costed permutation pass (sparsity/balance.py): flattening the
+    # per-rank imbalance scales the blocked winner's max-rank compute
+    # back toward the mean; apply iff the saving beats the permutation's
+    # amortized cost.  Densified winners execute the full local GEMM
+    # regardless of the mask layout, so there is nothing to rebalance.
+    imb = max(float(rank_imbalance), 1.0) if rank_imbalance else 1.0
+    rebalance = False
+    saved_s = permute_s = 0.0
+    if blocked and imb > 1.0 and math.isfinite(best.compute_s):
+        permute_s = rebalance_cost_s(hw, prob)
+        saved_s = best.compute_s * (1.0 - 1.0 / imb)
+        rebalance = saved_s > permute_s
     # schedule-engine depth: double-buffer whenever the winner's
     # schedule has more than one step (depth 2 never predicts slower —
     # overlap_s >= 0); single-step schedules gain nothing from a second
@@ -241,6 +273,10 @@ def _plan_cached(
         candidates=candidates,
         pipeline_depth=2 if steps > 1 else 1,
         overlap_eff=overlap_efficiency(hw, best.algorithm),
+        rank_imbalance=imb,
+        rebalance=rebalance,
+        rebalance_saved_s=saved_s,
+        rebalance_cost_s=permute_s,
     )
 
 
@@ -258,6 +294,7 @@ def plan_multiply(
     stack_size: Optional[int] = None,
     align: Optional[bool] = None,
     hw: Optional[HardwareModel] = None,
+    rank_imbalance: Optional[float] = None,
 ) -> MultiplyPlan:
     """Choose how to run C = A @ B of global shape (m, k) x (k, n).
 
@@ -271,6 +308,11 @@ def plan_multiply(
     stack_size/align  pin the blocked path's stack params (None = the
                 occupancy-binned autotune winner)
     hw          cost-model constants (None = calibrate.get_hardware_model)
+    rank_imbalance  max/mean per-rank retained-triple load from the
+                caller's mask decomposition (sparsity.balance): switches
+                blocked compute to rank-exact max-rank pricing and arms
+                the costed permutation-pass decision; None keeps the
+                legacy union-plan pricing
 
     Results are LRU-cached on the full signature: a second identical
     call returns the cached plan with zero cost-model evaluations.
@@ -291,7 +333,8 @@ def plan_multiply(
         int(m), int(k), int(n), bm, bk, bn, pr, pc, c_stack,
         round(occ, 9), int(np.dtype(dtype).itemsize),
         algorithm, None if densify is None else bool(densify),
-        stack_size, align, hw, _winners_stamp())
+        stack_size, align, hw, _winners_stamp(),
+        None if rank_imbalance is None else round(float(rank_imbalance), 6))
 
 
 @dataclasses.dataclass(frozen=True)

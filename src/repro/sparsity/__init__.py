@@ -16,6 +16,9 @@ arXiv:1910.13555) optimize for.
                   retained-triple counting, the retained C support
                   (product mask), per-step emptiness under eps
     workloads.py  sparsity-evolving workloads (McWeeny purification)
+    balance.py    costed load balancing: DBCSR's randomized row/col
+                  permutation of the block distribution as a planner
+                  decision (rank-exact execution, ISSUE 9)
 
 The eps contract (shared with core/stacks.py, core/engine.py,
 core/multiply.py, core/dbcsr.py): a triple (i, k, j) is RETAINED iff
@@ -29,8 +32,15 @@ from .norms import (block_norms_of, compute_block_norms,
 from .filter import (count_retained_triples, norm_filter_stats,
                      product_mask, retained_pair_presence)
 from .workloads import banded_hamiltonian, initial_density, mcweeny_purify
+from .balance import (RebalancePlan, chunk_imbalance, chunk_loads,
+                      plan_rebalance, retained_block_weights)
 
 __all__ = [
+    "RebalancePlan",
+    "chunk_imbalance",
+    "chunk_loads",
+    "plan_rebalance",
+    "retained_block_weights",
     "block_norms_of",
     "compute_block_norms",
     "normalize_block_norms",

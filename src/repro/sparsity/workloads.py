@@ -158,21 +158,31 @@ def mcweeny_purify(
             "idempotency": idem,
             "trace_P": float(Pn.trace()),
         }
-        retained = filtered = 0
+        retained = filtered = busiest = 0
         flop = 2 * (P.layout.block_rows * P.layout.block_cols
                     * P.layout.block_cols)
         have_stats = False
+        rank_imbs = []
         for plan in (plan2, plan3):
             st = getattr(plan, "executor_stats", None)
             if st:
                 have_stats = True
                 retained += st.get("n_entries", 0)
                 filtered += st.get("n_norm_filtered_triples", 0)
+                # rank-exact runs: the busiest rank's own executed
+                # triples (== n_entries on union/collapsed plans)
+                busiest += st.get("max_rank_entries",
+                                  st.get("n_entries", 0))
+                if st.get("rank_imbalance") is not None:
+                    rank_imbs.append(st["rank_imbalance"])
         if have_stats:
             entry["n_retained_triples"] = retained
             entry["n_norm_filtered_triples"] = filtered
             entry["retained_flops"] = retained * flop
             entry["filtered_flops"] = filtered * flop
+            entry["max_rank_entries"] = busiest
+            if rank_imbs:
+                entry["rank_imbalance"] = max(rank_imbs)
         if obs.enabled():
             # the canonical sparsity-evolution signal as gauge samples:
             # occupancy rises for a step or two, then decays to the

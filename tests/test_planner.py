@@ -134,6 +134,49 @@ def test_blocked_cost_rejects_zero_occupancy():
 
 
 # ---------------------------------------------------------------------------
+# rank imbalance pricing + rebalance arming (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+def test_rebalance_armed_on_imbalanced_blocked_plan():
+    kw = dict(blocks=(64, 64, 64), mesh_shape=(2, 2), occupancy=0.05,
+              densify=False, hw=HW)
+    plan = plan_multiply(4096, 4096, 4096, **kw, rank_imbalance=4.0)
+    assert plan.rank_imbalance == pytest.approx(4.0)
+    assert plan.rebalance, "4x imbalance at 5% fill should arm rebalance"
+    assert plan.rebalance_saved_s > plan.rebalance_cost_s > 0.0
+    assert "imbal" in plan.explain()
+
+
+def test_rebalance_declined_when_balanced():
+    kw = dict(blocks=(64, 64, 64), mesh_shape=(2, 2), occupancy=0.05,
+              densify=False, hw=HW)
+    uniform = plan_multiply(4096, 4096, 4096, **kw, rank_imbalance=1.0)
+    assert not uniform.rebalance and uniform.rebalance_saved_s == 0.0
+    unknown = plan_multiply(4096, 4096, 4096, **kw)
+    assert not unknown.rebalance, \
+        "no imbalance estimate must mean no speculative permutation"
+    # distinct imbalances must not collide in the plan cache
+    assert unknown is not uniform
+
+
+def test_imbalance_inflates_blocked_candidate_cost():
+    prob = Problem(4096, 4096, 4096, 64, 64, 64, 0.05, 4, 2, 2)
+    union = candidate_cost(HW, prob, "cannon", False)
+    flat = candidate_cost(HW, prob, "cannon", False, rank_imbalance=1.0)
+    skew = candidate_cost(HW, prob, "cannon", False, rank_imbalance=3.0)
+    assert skew.total_s > flat.total_s, \
+        "busiest-rank pricing should inflate the imbalanced candidate"
+    # rank-exact pricing at 5% fill on 4 ranks undercuts the legacy
+    # union inflation (1 - 0.95^4) even at 3x imbalance
+    assert flat.total_s < skew.total_s < union.total_s
+    dense_flat = candidate_cost(HW, prob, "cannon", True)
+    dense_skew = candidate_cost(HW, prob, "cannon", True, rank_imbalance=3.0)
+    assert dense_skew.total_s == pytest.approx(dense_flat.total_s), \
+        "densified execution is occupancy-blind; imbalance must not price it"
+
+
+# ---------------------------------------------------------------------------
 # planner-owned classify threshold + winners-table metadata
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,253 @@
+"""Rank-exact execution (ISSUE 9): per-rank plans must be bitwise
+interchangeable with the union-of-ranks plans they replace.
+
+The distributed battery runs in one subprocess with 8 host devices
+(conftest.run_subprocess_devices) and prints JSON; every algorithm x
+mesh x pattern cell compares ``rank_exact=True`` against
+``rank_exact=False`` on identical operands.  The load-balancing
+permutation (sparsity.balance) is unit-tested in-process — it is pure
+host-side numpy.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from conftest import run_subprocess_devices
+
+from repro.sparsity.balance import (RebalancePlan, chunk_imbalance,
+                                    chunk_loads, invert_permutation,
+                                    permute_block_cols, permute_block_rows,
+                                    plan_rebalance, retained_block_weights)
+
+BATTERY = r"""
+import json
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import make_mesh
+from repro.core.blocking import GridSpec
+from repro.core.multiply import distributed_matmul
+
+rng = np.random.RandomState(0)
+out = {}
+bs = 8
+nb = 8
+n = nb * bs  # 64
+
+grid = GridSpec("data", "model")
+mesh11 = make_mesh((1, 1), ("data", "model"))
+mesh22 = make_mesh((2, 2), ("data", "model"))
+mesh41 = make_mesh((4, 1), ("data", "model"))
+mesh3 = make_mesh((2, 2, 2), ("pod", "data", "model"))
+grid3 = GridSpec("data", "model", stack_axis="pod")
+expand = lambda m: np.repeat(np.repeat(m, bs, 0), bs, 1)
+
+
+def banded(nb, hw=1):
+    idx = np.arange(nb)
+    return np.abs(idx[:, None] - idx[None, :]) <= hw
+
+
+def power_law(nb, fill=0.3, seed=3):
+    r = np.random.RandomState(seed)
+    p = (1.0 / (1.0 + np.arange(nb))) ** 1.2
+    m = r.rand(nb, nb) < np.minimum(np.outer(p, p) * fill * nb, 1.0)
+    np.fill_diagonal(m, True)
+    return m
+
+
+patterns = {
+    "dense": np.ones((nb, nb), dtype=bool),
+    "banded": banded(nb),
+    "powerlaw": power_law(nb),
+}
+
+cases = [
+    ("cannon@1x1", "cannon", mesh11, grid, {}),
+    ("cannon@2x2", "cannon", mesh22, grid, {}),
+    ("summa@2x2", "summa", mesh22, grid, {}),
+    ("summa@4x1", "summa", mesh41, grid, {}),
+    ("summa_gather@2x2", "summa", mesh22, grid, {"bcast": "gather"}),
+    ("ts_k@2x2", "ts_k", mesh22, grid, {}),
+    ("cannon25d@2x2x2", "cannon25d", mesh3, grid3, {}),
+]
+
+for pname, mask in patterns.items():
+    A = rng.randn(n, n).astype(np.float32) * expand(mask)
+    B = rng.randn(n, n).astype(np.float32) * expand(mask)
+    for cname, algo, msh, grd, extra in cases:
+        shd = NamedSharding(msh, P(grd.row_axis, grd.col_axis))
+        Ad, Bd = jax.device_put(A, shd), jax.device_put(B, shd)
+        kw = dict(mesh=msh, grid=grd, algorithm=algo, densify=False,
+                  block_m=bs, block_k=bs, block_n=bs, local_kernel="ref",
+                  pipeline_depth=1, a_mask=mask, b_mask=mask, **extra)
+        Cu, pu = distributed_matmul(Ad, Bd, **kw, rank_exact=False,
+                                    return_plan=True)
+        Cr, pr_ = distributed_matmul(Ad, Bd, **kw, rank_exact=True,
+                                     return_plan=True)
+        key = f"{cname}/{pname}"
+        out[key + "_bitwise"] = bool(
+            np.array_equal(np.asarray(Cu), np.asarray(Cr)))
+        eu, er = pu.executor_stats or {}, pr_.executor_stats or {}
+        out[key + "_union_entries"] = int(eu.get("n_entries", 0))
+        out[key + "_rank_entries"] = int(
+            er.get("max_rank_entries", er.get("n_entries", 0)))
+        out[key + "_collapsed"] = "max_rank_entries" not in er
+
+# eps = 0 must be bitwise against the mask-only rank-exact run
+mask = patterns["banded"]
+A = rng.randn(n, n).astype(np.float32) * expand(mask)
+B = rng.randn(n, n).astype(np.float32) * expand(mask)
+shd = NamedSharding(mesh22, P("data", "model"))
+Ad, Bd = jax.device_put(A, shd), jax.device_put(B, shd)
+kw = dict(mesh=mesh22, grid=grid, algorithm="cannon", densify=False,
+          block_m=bs, block_k=bs, block_n=bs, local_kernel="ref",
+          pipeline_depth=1, a_mask=mask, b_mask=mask)
+C0 = distributed_matmul(Ad, Bd, **kw)
+C1 = distributed_matmul(Ad, Bd, **kw, filter_eps=0.0)
+out["eps0_bitwise"] = bool(
+    np.array_equal(np.asarray(C0), np.asarray(C1)))
+
+# forced rebalance must round-trip the permutation: same product
+# (summa keeps the k accumulation order rank-independent -> bitwise;
+# cannon's start offset moves with the row rank -> allclose)
+hot = np.zeros((nb, nb), dtype=bool)
+hot[:2, :] = hot[:, :2] = True
+np.fill_diagonal(hot, True)
+A = rng.randn(n, n).astype(np.float32) * expand(hot)
+B = rng.randn(n, n).astype(np.float32) * expand(hot)
+Ad, Bd = jax.device_put(A, shd), jax.device_put(B, shd)
+for algo, exact in (("summa", True), ("cannon", False)):
+    kw = dict(mesh=mesh22, grid=grid, algorithm=algo, densify=False,
+              block_m=bs, block_k=bs, block_n=bs, local_kernel="ref",
+              pipeline_depth=1, a_mask=hot, b_mask=hot)
+    C0 = np.asarray(distributed_matmul(Ad, Bd, **kw, rebalance=False))
+    C1, pl = distributed_matmul(Ad, Bd, **kw, rebalance=True,
+                                return_plan=True)
+    C1 = np.asarray(C1)
+    es = pl.executor_stats or {}
+    out[f"rebalance_{algo}_applied"] = bool(es.get("rebalance_applied"))
+    if exact:
+        out[f"rebalance_{algo}_same"] = bool(np.array_equal(C0, C1))
+    else:
+        out[f"rebalance_{algo}_same"] = bool(
+            np.allclose(C0, C1, rtol=1e-5, atol=5e-4))
+    if es.get("rebalance_applied"):
+        out[f"rebalance_{algo}_improved"] = bool(
+            es.get("rebalance_imbalance_after", 9e9)
+            < es.get("rebalance_imbalance_before", 0))
+
+print("JSON" + json.dumps(out))
+"""
+
+CASES = ["cannon@1x1", "cannon@2x2", "summa@2x2", "summa@4x1",
+         "summa_gather@2x2", "ts_k@2x2", "cannon25d@2x2x2"]
+PATTERNS = ["dense", "banded", "powerlaw"]
+
+
+@pytest.fixture(scope="module")
+def battery():
+    stdout = run_subprocess_devices(BATTERY, n_devices=8, timeout=900)
+    line = [l for l in stdout.splitlines() if l.startswith("JSON")][-1]
+    return json.loads(line[4:])
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+@pytest.mark.parametrize("case", CASES)
+def test_rank_exact_bitwise_vs_union(battery, case, pattern):
+    assert battery[f"{case}/{pattern}_bitwise"], \
+        (case, pattern, "rank-exact product != union product")
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_dense_collapses_to_union(battery, case):
+    # uniform fill: every rank's plan is identical, so the executor must
+    # collapse to the single shared plan (no per-rank slab dispatched)
+    assert battery[f"{case}/dense_collapsed"], \
+        (case, "dense multiply did not collapse to the union plan")
+
+
+@pytest.mark.parametrize("case", ["cannon@2x2", "summa@2x2"])
+def test_banded_busiest_rank_shrinks(battery, case):
+    u = battery[f"{case}/banded_union_entries"]
+    r = battery[f"{case}/banded_rank_entries"]
+    assert u and r and r < u, (case, u, r)
+
+
+def test_eps0_bitwise_under_rank_exact(battery):
+    assert battery["eps0_bitwise"]
+
+
+@pytest.mark.parametrize("algo", ["summa", "cannon"])
+def test_rebalance_round_trip(battery, algo):
+    assert battery[f"rebalance_{algo}_applied"], \
+        (algo, "forced rebalance never applied a permutation")
+    assert battery[f"rebalance_{algo}_same"], \
+        (algo, "permuted execution changed the product")
+    assert battery.get(f"rebalance_{algo}_improved", True)
+
+
+# ---------------------------------------------------------------------------
+# load-balance planning: pure host-side numpy, no devices needed
+# ---------------------------------------------------------------------------
+
+
+def test_invert_permutation_round_trip(rng):
+    perm = rng.permutation(17)
+    inv = invert_permutation(perm)
+    assert np.array_equal(perm[inv], np.arange(17))
+    assert np.array_equal(inv[perm], np.arange(17))
+
+
+def test_permute_rows_cols_round_trip(rng):
+    x = rng.randn(32, 48).astype(np.float32)
+    pm, pn = rng.permutation(4), rng.permutation(6)
+    y = permute_block_rows(x, pm, 8)
+    y = permute_block_cols(y, pn, 8)
+    z = permute_block_rows(y, invert_permutation(pm), 8)
+    z = permute_block_cols(z, invert_permutation(pn), 8)
+    assert np.array_equal(np.asarray(z), x)
+
+
+def test_chunk_loads_and_imbalance():
+    W = np.zeros((4, 4), dtype=np.int64)
+    W[0, 0] = 8  # one hot chunk on a 2x2 decomposition
+    loads = chunk_loads(W, 2, 2)
+    assert loads.shape == (2, 2) and loads[0, 0] == 8 and loads.sum() == 8
+    assert chunk_imbalance(W, 2, 2) == pytest.approx(4.0)
+    assert chunk_imbalance(np.ones((4, 4)), 2, 2) == pytest.approx(1.0)
+    assert chunk_imbalance(W, 1, 1) == 1.0  # single rank is never imbalanced
+
+
+def test_retained_weights_respect_filtering():
+    am = np.ones((4, 4), dtype=bool)
+    bm = np.ones((4, 4), dtype=bool)
+    W = retained_block_weights(am, bm)
+    assert W.shape == (4, 4) and np.all(W == 4)
+    an = np.full((4, 4), 1e-9)
+    bn = np.full((4, 4), 1e-9)
+    an[0, :] = bn[:, 0] = 1.0
+    Wf = retained_block_weights(am, bm, an, bn, filter_eps=1e-6)
+    assert Wf[0, 0] == 4 and Wf[1, 1] == 0
+
+
+def test_plan_rebalance_uniform_is_identity():
+    am = bm = np.ones((8, 8), dtype=bool)
+    plan = plan_rebalance(am, bm, 2, 2)
+    assert isinstance(plan, RebalancePlan) and plan.identity
+    assert plan.imbalance_after == pytest.approx(plan.imbalance_before)
+
+
+def test_plan_rebalance_reduces_hot_corner():
+    nb = 8
+    am = np.zeros((nb, nb), dtype=bool)
+    am[:2, :] = am[:, :2] = True
+    np.fill_diagonal(am, True)
+    plan = plan_rebalance(am, am, 2, 2)
+    assert not plan.identity
+    assert plan.imbalance_after < plan.imbalance_before
+    # the reported numbers must match a recomputation on permuted masks
+    pm, pn = plan.perm_m, plan.perm_n
+    W = retained_block_weights(am[pm], am[:, pn])
+    assert chunk_imbalance(W, 2, 2) == pytest.approx(plan.imbalance_after)
