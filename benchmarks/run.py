@@ -27,6 +27,8 @@ BENCHES = [
      "benchmarks.bench_abft"),
     ("telemetry (tracing overhead + trace schema + planner scoreboard)",
      "benchmarks.bench_obs"),
+    ("tensor contraction (layout regret + fill scaling)",
+     "benchmarks.bench_tensor"),
     ("IV-C DBCSR vs PDGEMM(SUMMA)", "benchmarks.bench_vs_pgemm"),
     ("2.5D Cannon (pod-axis, beyond-paper)", "benchmarks.bench_25d"),
     ("roofline summary (from dry-run artifacts)", "benchmarks.bench_roofline"),

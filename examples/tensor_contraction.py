@@ -1,0 +1,98 @@
+"""Blocked sparse tensor contraction — the 3-index RPA/THC workload
+the DBCSR tensor extension exists for (arXiv:1910.13555).
+
+Post-Hartree-Fock methods (RPA, THC-scaled MP2) contract 3-index
+integral tensors ``B[i,a,P]`` against 2-index transformation matrices
+``M[P,Q]``.  The integral tensor is block-sparse with exponentially
+decaying magnitude away from a diagonal locality band — exactly the
+structure DBCSR's norm-based filtering exploits.
+
+This demo builds that workload on a 4-device (2x2) mesh and runs
+
+    C[i,a,Q] = sum_P  B[i,a,P] * M[P,Q]
+
+through ``dbcsr.contract("iaP,PQ->iaQ", ...)``:
+
+  * the 3-index tensor is created as a ``DBCSRTensor`` with per-block
+    occupancy mask + Frobenius norms,
+  * the planner enumerates every legal matricization (here: fuse
+    (i,a) into matrix rows vs transposed variants), prices each with
+    the lowered per-layout occupancy/imbalance and unfold/refold copy
+    cost, and picks one — the printed ``explain()`` shows the layout
+    table and which row won,
+  * masks and norms lower through the unfold, so the 2D engine's eps
+    filtering drops negligible-norm triples without ever seeing the
+    N-d frame,
+  * the result folds back to the 3-index output frame and is checked
+    against a dense ``jnp.einsum`` oracle.
+
+    PYTHONPATH=src python examples/tensor_contraction.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.compat import make_mesh
+from repro.core import dbcsr
+from repro.core.blocking import GridSpec
+
+# problem geometry: occupied x virtual x auxiliary basis
+N_I, N_A, N_P = 32, 64, 128
+B_I, B_A, B_P = 8, 16, 16
+FILTER_EPS = 1e-8
+
+
+def build_integral_tensor(rng):
+    """3-index THC-style integral tensor with exponential block decay
+    away from the (i, P) locality diagonal."""
+    data = rng.randn(N_I, N_A, N_P).astype(np.float32)
+    nbi, nba, nbp = N_I // B_I, N_A // B_A, N_P // B_P
+    # block magnitude ~ exp(-|i_blk/nbi - P_blk/nbp| * rate): orbitals
+    # couple strongly only to spatially nearby auxiliary functions
+    bi = np.arange(nbi)[:, None] / nbi
+    bp = np.arange(nbp)[None, :] / nbp
+    scale = np.exp(-30.0 * np.abs(bi - bp))           # (nbi, nbp)
+    full = np.repeat(np.repeat(scale, B_I, 0), B_P, 1)  # (N_I, N_P)
+    data *= full[:, None, :]
+    mask = (scale > 1e-6)[:, None, :] * np.ones((1, nba, 1), dtype=bool)
+    return data, mask
+
+
+def main():
+    mesh = make_mesh((2, 2), ("data", "model"))
+    grid = GridSpec("data", "model")
+    rng = np.random.RandomState(0)
+
+    data, mask = build_integral_tensor(rng)
+    B = dbcsr.create_tensor(data, mesh=mesh, grid=grid,
+                            block_sizes=(B_I, B_A, B_P),
+                            block_mask=mask, compute_norms=True)
+    M = dbcsr.create_tensor(rng.randn(N_P, N_P).astype(np.float32),
+                            mesh=mesh, grid=grid,
+                            block_sizes=(B_P, B_P))
+    print(f"integral tensor  {B.shape}  blocks {B.block_sizes}  "
+          f"occupancy {B.occupancy:.1%}")
+
+    C, plan = dbcsr.contract("iaP,PQ->iaQ", B, M, mesh=mesh,
+                             filter_eps=FILTER_EPS, return_plan=True)
+    print()
+    print(plan.explain())
+    print()
+    print(f"chosen matricization: {plan.layout}  "
+          f"(algorithm {plan.algorithm})")
+
+    oracle = jnp.einsum("iaP,PQ->iaQ", jnp.asarray(B.data),
+                        jnp.asarray(M.data))
+    err = float(np.abs(np.asarray(C.data) - np.asarray(oracle)).max())
+    scale = float(np.abs(np.asarray(oracle)).max())
+    print(f"result {C.shape}  occupancy {C.occupancy:.1%}  "
+          f"max |err| vs dense einsum = {err:.3g} (scale {scale:.3g})")
+    assert err < 1e-4 * max(scale, 1.0), "contract deviates from einsum"
+    print("OK: contraction matches the dense einsum oracle")
+
+
+if __name__ == "__main__":
+    main()

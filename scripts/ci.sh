@@ -76,6 +76,14 @@ PYTHONPATH=src python -m repro.robustness.chaos --report
 # scoreboard row per algorithm (artifacts/bench/obs_smoke.json)
 python benchmarks/bench_obs.py --smoke --check
 
+# tensor contractions (repro.tensor): the planner's matricization
+# choice must be within 10% (+1 ms jitter floor) of the best fixed
+# layout over square/tall/skinny contraction geometries, and the
+# blocked executor dispatch built from the LOWERED N-d masks must get
+# monotonically cheaper — fewer retained triples AND no slower — as
+# tensor fill falls 100/50/20/5% (artifacts/bench/tensor_smoke.json)
+python benchmarks/bench_tensor.py --smoke --check
+
 # planner drift: compare the sweep's predicted-vs-measured log
 # (artifacts/obs/plan_outcomes.jsonl, written by bench_obs) against the
 # calibration — advisory here (no --strict): interpret-mode hosts run

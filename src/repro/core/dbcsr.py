@@ -28,7 +28,8 @@ from repro import obs
 from .blocking import BlockLayout, GridSpec
 
 __all__ = ["DBCSRMatrix", "create", "multiply", "multiply_batched",
-           "multiply_vector", "add", "trace", "transpose"]
+           "multiply_vector", "add", "trace", "transpose",
+           "contract", "create_tensor"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -383,6 +384,85 @@ def multiply(
     c.last_plan = plan
     c.verification = plan.verification
     return (c, plan) if return_plan else c
+
+
+def create_tensor(array, *, mesh, grid=GridSpec(), block_sizes,
+                  block_mask=None, compute_norms=False):
+    """Create a blocked N-d ``DBCSRTensor`` (repro.tensor) — the tensor
+    analogue of ``create``: uniform per-axis blocking, an optional N-d
+    block occupancy mask (absent blocks' payload zeroed) and a lazily
+    cached per-block Frobenius norm tensor.  Tensors are contracted
+    with ``contract``."""
+    from repro.tensor import create_tensor as _create_tensor
+
+    return _create_tensor(array, mesh=mesh, grid=grid,
+                          block_sizes=block_sizes, block_mask=block_mask,
+                          compute_norms=compute_norms)
+
+
+def contract(
+    spec: str,
+    a,
+    b,
+    *,
+    mesh: Mesh,
+    algorithm: str = "auto",
+    layout="auto",
+    densify: Optional[bool] = None,
+    filter_eps: Optional[float] = None,
+    verify: Optional[str] = None,
+    rank_exact: Optional[bool] = None,
+    return_plan: bool = False,
+    **kw,
+):
+    """C = contraction of two blocked tensors per an einsum ``spec``
+    (``"ijk,kl->ijl"``) — the N-d sibling of ``multiply`` /
+    ``multiply_batched`` (repro.tensor, after arXiv:1910.13555): the
+    spec is parsed into (contracted, A-free, B-free) index groups, the
+    tensors are MATRICIZED — each group fused into one blocked matrix
+    dimension at the block level, so masks lower by a pure block-grid
+    transpose (an N-d block is retained iff its 2D image is) and the
+    Frobenius norm cache lowers exactly (norms are invariant to the
+    intra-block permutation) — the 2D product runs through the ordinary
+    ``multiply``, and the result folds back into the spec's output
+    frame as a ``DBCSRTensor`` carrying the retained N-d mask.
+
+    ``layout`` — the matricization is a COSTED choice, not a
+    convention: every legal layout (fusion orders of the three index
+    groups x the transposed variant) is priced by the planner as its
+    own 2D multiply plan (per-layout occupancy and rank-imbalance from
+    the matricized masks) plus its unfold/refold copy cost
+    (``cost_model.matricize_cost_s``).  ``"auto"`` (default) lets
+    ``planner.plan_contract`` pick — LRU-cached on the contraction
+    signature, so a repeated contraction replans for free; a
+    ``Layout`` instance or its label string (e.g. ``"(ij|k)@(k|l)"``)
+    pins it.  The decision is observable: the result carries the
+    executed ``ContractionPlan`` as ``C.last_plan``, whose
+    ``explain()`` prints the per-layout table above the winning
+    layout's per-candidate multiply breakdown.
+
+    ``algorithm`` / ``densify`` / ``filter_eps`` / ``verify`` /
+    ``rank_exact`` and any further kwargs thread through to the
+    underlying ``multiply`` with identical semantics — eps filtering
+    uses the lowered norms (same subtractive contract, ``filter_eps=0``
+    bit-identical to unfiltered), ABFT verification detects/localizes/
+    repairs corruption before the refold (so the guarantee lands in the
+    tensor frame, reported as ``C.verification``), and rank-exact
+    per-rank plans see the matricized masks.
+
+    At a FIXED layout the result is bitwise equal to hand-matricizing
+    the operands and calling ``multiply`` directly (the fold is a pure
+    element permutation); different layouts change the fused
+    accumulation order and agree to float tolerance only.
+
+    ``return_plan=True`` returns ``(C, ContractionPlan)``.
+    """
+    from repro.tensor import contract as _contract
+
+    return _contract(spec, a, b, mesh=mesh, algorithm=algorithm,
+                     layout=layout, densify=densify,
+                     filter_eps=filter_eps, verify=verify,
+                     rank_exact=rank_exact, return_plan=return_plan, **kw)
 
 
 def _bucket_key(a: DBCSRMatrix, b: DBCSRMatrix,

@@ -27,7 +27,9 @@ __all__ = ["category_breakdown", "render_breakdown", "render_timeline",
            "main"]
 
 # categories whose spans are mutually exclusive slices of a dispatch
-_PHASE_CATS = ("plan", "comm", "compute", "verify", "repair")
+# ("matricize" = the tensor subsystem's unfold/refold phases under a
+# contract root — disjoint from the nested multiply's own phases)
+_PHASE_CATS = ("plan", "matricize", "comm", "compute", "verify", "repair")
 
 
 def category_breakdown(spans: Sequence[SpanRecord]) -> Dict[str, float]:

@@ -35,6 +35,15 @@ def planner_scoreboard(records: Sequence[dict]) -> Dict[str, dict]:
     Rows must carry ``algorithm``, ``predicted_s`` and ``measured_s``;
     rows with non-positive measurements are skipped (a plan whose
     dispatch never ran carries no signal).
+
+    Rows are grouped by their root-span KIND, not just by algorithm:
+    plain ``multiply``/``multiply_batched`` rows keep the bare
+    algorithm as their group key (the schema ``calibrate
+    --check-drift`` has always thresholded on), while other roots —
+    e.g. ``contract`` rows, whose end-to-end measurement includes the
+    unfold/refold copies their plan also prices — group under
+    ``"<kind>:<algorithm>"`` so their different cost structure never
+    pollutes the 2D algorithms' drift statistics.
     """
     by_algo: Dict[str, List[dict]] = {}
     for r in records:
@@ -43,6 +52,9 @@ def planner_scoreboard(records: Sequence[dict]) -> Dict[str, dict]:
         meas = r.get("measured_s")
         if not algo or pred is None or meas is None:
             continue
+        kind = r.get("kind")
+        if kind not in (None, "multiply", "multiply_batched"):
+            algo = f"{kind}:{algo}"
         pred, meas = float(pred), float(meas)
         if meas <= 0.0 or not math.isfinite(pred) or not math.isfinite(meas):
             continue
@@ -70,12 +82,12 @@ def render_scoreboard(sb: Dict[str, dict]) -> str:
     if not sb:
         return "planner scoreboard: no recorded plan outcomes"
     lines = [
-        f"{'algorithm':<12} {'n':>4} {'predicted':>11} {'measured':>11} "
+        f"{'algorithm':<16} {'n':>4} {'predicted':>11} {'measured':>11} "
         f"{'abs err med':>11} {'rel err med':>11}",
     ]
     for algo, row in sb.items():
         lines.append(
-            f"{algo:<12} {row['n']:>4} "
+            f"{algo:<16} {row['n']:>4} "
             f"{row['predicted_total_s']*1e3:>9.2f}ms "
             f"{row['measured_total_s']*1e3:>9.2f}ms "
             f"{row['abs_err_median_s']*1e3:>9.3f}ms "

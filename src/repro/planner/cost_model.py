@@ -77,6 +77,7 @@ __all__ = [
     "enumerate_candidates",
     "feasible",
     "rebalance_cost_s",
+    "matricize_cost_s",
     "overlap_efficiency",
     "algorithm_steps",
     "ts_crossover_ratio",
@@ -621,6 +622,17 @@ def rebalance_cost_s(hw: HardwareModel, prob: Problem) -> float:
     e = prob.itemsize
     passes = (prob.m * prob.k + prob.k * prob.n + 2.0 * prob.m * prob.n) * e
     return passes / hw.densify_bytes_per_s + hw.dispatch_s
+
+
+def matricize_cost_s(hw: HardwareModel, copy_bytes) -> float:
+    """Price of a tensor layout's unfold/refold data movement
+    (repro.tensor.matricize reports the moved bytes: one read + one
+    write per non-trivial unfold of A, B and refold of C), at the same
+    host copy bandwidth as the densify pass.  This is the copy term a
+    matricization candidate carries on top of its 2D multiply plan."""
+    if copy_bytes <= 0:
+        return 0.0
+    return float(copy_bytes) / hw.densify_bytes_per_s
 
 
 def ts_crossover_ratio(hw: Optional[HardwareModel] = None,

@@ -34,7 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["compute_block_norms", "block_norms_of",
-           "normalize_block_norms", "product_norm_bound"]
+           "normalize_block_norms", "product_norm_bound",
+           "tensor_block_norms"]
 
 
 @functools.lru_cache(maxsize=None)
@@ -80,6 +81,60 @@ def block_norms_of(x, block_m: int, block_n: int,
     (it should not — absent blocks are stored as zeros — but norms must
     never resurrect a block the mask declares absent)."""
     norms = compute_block_norms(x, block_m, block_n)
+    if block_mask is not None:
+        norms = np.where(np.asarray(block_mask, dtype=bool), norms,
+                         np.float32(0.0)).astype(np.float32)
+    return norms
+
+
+@functools.lru_cache(maxsize=None)
+def _norm_reduction_nd(block_sizes: Tuple[int, ...]):
+    """N-d generalization of ``_norm_reduction`` for DBCSRTensor
+    payloads: one vmapped sum-of-squares per N-d block geometry.  The
+    2D case stays on ``_norm_reduction`` so its jit cache — and the
+    engine's content fingerprints built on it — are untouched."""
+    nd = len(block_sizes)
+
+    @jax.jit
+    def reduce(x):
+        inter = []
+        for d, bs in zip(x.shape, block_sizes):
+            inter += [d // bs, bs]
+        # interleaved (nb_1, bs_1, ..., nb_N, bs_N) -> block axes first
+        y = x.reshape(inter).transpose(
+            tuple(range(0, 2 * nd, 2)) + tuple(range(1, 2 * nd, 2)))
+        nb = tuple(d // bs for d, bs in zip(x.shape, block_sizes))
+        flat = y.astype(jnp.float32).reshape(nb + (-1,))
+        return jnp.sqrt(jnp.sum(flat * flat, axis=-1))
+
+    return reduce
+
+
+def tensor_block_norms(
+    x,
+    block_sizes: Tuple[int, ...],
+    block_mask: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """N-d payload -> ``block_grid``-shaped float32 numpy of per-block
+    Frobenius norms, mask-zeroed like ``block_norms_of``.
+
+    These norms are EXACT under matricization: the tensor unfold
+    (repro.tensor.matricize) permutes elements *within* a block but a
+    Frobenius norm is permutation-invariant, so the 2D views of a
+    tensor lower this cache through a pure block-grid transpose+reshape
+    instead of touching device data again.
+    """
+    block_sizes = tuple(int(b) for b in block_sizes)
+    if len(block_sizes) != np.ndim(x):
+        raise ValueError(
+            f"block_sizes names {len(block_sizes)} axes but the payload "
+            f"has {np.ndim(x)}")
+    for ax, (d, bs) in enumerate(zip(np.shape(x), block_sizes)):
+        if bs <= 0 or d % bs:
+            raise ValueError(
+                f"axis {ax}: dim {d} not divisible by block size {bs}")
+    out = _norm_reduction_nd(block_sizes)(jnp.asarray(x))
+    norms = np.asarray(jax.device_get(out), dtype=np.float32)
     if block_mask is not None:
         norms = np.where(np.asarray(block_mask, dtype=bool), norms,
                          np.float32(0.0)).astype(np.float32)

@@ -1,0 +1,182 @@
+"""DBCSRTensor — N-dimensional blocked tensor container.
+
+The tensor analogue of ``DBCSRMatrix`` (arXiv:1910.13555): every axis
+``d_a`` is uniformly tiled into ``nb_a`` blocks of size ``bs_a``, and
+the tensor carries a static N-d block occupancy mask plus lazily-cached
+per-block Frobenius norms.  Exactly like the 2D container, absent
+blocks are stored as zeros in the dense payload so shapes stay static
+under jit, and the mask/norms travel through the pytree aux as
+``(shape, bytes)`` so block sparsity survives jit/vmap round-trips.
+
+Distribution model: the N-d payload lives *replicated* on the mesh —
+the process-grid distribution happens at matricization time
+(matricize.py unfolds the tensor into a 2D ``DBCSRMatrix`` view sharded
+over the (row_axis, col_axis) grid, which is where the paper's tensors
+actually live during a contraction).  The N-d frame is the user frame;
+the 2D frame is the execution frame.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.blocking import GridSpec
+
+__all__ = ["DBCSRTensor", "create_tensor"]
+
+
+def _expand_mask(mask: np.ndarray, block_sizes: Tuple[int, ...]) -> np.ndarray:
+    """Element-level expansion of an N-d block mask (each block entry
+    repeated bs_a times along axis a)."""
+    full = mask
+    for ax, bs in enumerate(block_sizes):
+        full = np.repeat(full, bs, axis=ax)
+    return full
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DBCSRTensor:
+    """A blocked N-d tensor.
+
+    data        : N-d jax.Array (replicated on the mesh; see module doc)
+    block_sizes : per-axis uniform block size, ``len == data.ndim``
+    grid        : mesh-axis names matricized views are sharded over
+    block_mask  : optional N-d numpy bool of shape ``block_grid``
+    block_norms : optional N-d numpy float32 — per-block Frobenius
+                  norms, lazily computed/cached by ``norms()`` and
+                  lowered through matricization for ``filter_eps``
+
+    Results of ``dbcsr.contract`` additionally carry the executed
+    ``ContractionPlan`` as a plain ``last_plan`` attribute (host-side
+    observability only — not part of the pytree, does not survive jit).
+    """
+
+    data: jax.Array
+    block_sizes: Tuple[int, ...]
+    grid: GridSpec
+    block_mask: Optional[np.ndarray] = None
+    block_norms: Optional[np.ndarray] = None
+
+    # -- pytree protocol (mirrors DBCSRMatrix: data is the only leaf) --
+    def tree_flatten(self):
+        mask_aux = (None if self.block_mask is None
+                    else (self.block_mask.shape, self.block_mask.tobytes()))
+        norms_aux = None
+        if self.block_norms is not None:
+            norms = np.ascontiguousarray(self.block_norms, dtype=np.float32)
+            norms_aux = (norms.shape, norms.tobytes())
+        return (self.data,), (tuple(self.block_sizes), self.grid,
+                              mask_aux, norms_aux)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        block_sizes, grid, mask_aux, norms_aux = aux
+        mask = None
+        if mask_aux is not None:
+            shape, raw = mask_aux
+            mask = np.frombuffer(raw, dtype=bool).reshape(shape).copy()
+        norms = None
+        if norms_aux is not None:
+            shape, raw = norms_aux
+            norms = np.frombuffer(raw, dtype=np.float32).reshape(shape).copy()
+        return cls(children[0], block_sizes, grid, mask, norms)
+
+    # -- blocked-tensor API --------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(self.data.shape)
+
+    @property
+    def ndim(self) -> int:
+        return self.data.ndim
+
+    @property
+    def block_grid(self) -> Tuple[int, ...]:
+        return tuple(d // bs for d, bs in zip(self.shape, self.block_sizes))
+
+    @property
+    def nblocks(self) -> int:
+        n = 1
+        for nb in self.block_grid:
+            n *= nb
+        return n
+
+    @property
+    def occupancy(self) -> float:
+        if self.block_mask is None:
+            return 1.0
+        return float(self.block_mask.mean())
+
+    def norms(self, recompute: bool = False) -> np.ndarray:
+        """Per-block Frobenius norms (N-d float32 numpy of shape
+        ``block_grid``), cached after the first call.  Mask-absent
+        blocks report 0.  Exact under matricization: a block's
+        Frobenius norm is invariant to the intra-block element
+        permutation the unfold applies, so the 2D views lower this
+        cache instead of recomputing it."""
+        if self.block_norms is None or recompute:
+            from repro.sparsity.norms import tensor_block_norms
+
+            self.block_norms = tensor_block_norms(
+                self.data, self.block_sizes, self.block_mask)
+        return self.block_norms
+
+    def filter(self, eps: float) -> "DBCSRTensor":
+        """Post-contraction filtering in the tensor frame: drop every
+        block with ``norm < eps`` (blocks exactly at eps survive,
+        matching the 2D ``DBCSRMatrix.filter`` contract), zeroing the
+        dropped payload.  Never resurrects a mask-absent block."""
+        norms = self.norms()
+        mask = norms >= float(eps)
+        if self.block_mask is not None:
+            mask &= self.block_mask
+        full = _expand_mask(mask, self.block_sizes)
+        data = self.data * jnp.asarray(full, dtype=self.data.dtype)
+        new_norms = np.where(mask, norms, np.float32(0.0)).astype(np.float32)
+        return DBCSRTensor(data, self.block_sizes, self.grid, mask, new_norms)
+
+
+def create_tensor(
+    array,
+    *,
+    mesh: Mesh,
+    grid: GridSpec = GridSpec(),
+    block_sizes: Tuple[int, ...],
+    block_mask: Optional[np.ndarray] = None,
+    compute_norms: bool = False,
+) -> DBCSRTensor:
+    """Create a blocked N-d tensor from a host/global array (the tensor
+    analogue of ``dbcsr.create``).  Every axis must be divisible by its
+    block size; a ``block_mask`` of shape ``block_grid`` zeroes absent
+    blocks' payload so dense math matches sparse semantics.
+    ``compute_norms=True`` eagerly fills the norm cache."""
+    block_sizes = tuple(int(b) for b in block_sizes)
+    if len(block_sizes) != np.ndim(array):
+        raise ValueError(
+            f"block_sizes names {len(block_sizes)} axes but the array "
+            f"has {np.ndim(array)}")
+    for ax, (d, bs) in enumerate(zip(np.shape(array), block_sizes)):
+        if bs <= 0 or d % bs:
+            raise ValueError(
+                f"axis {ax}: dim {d} not divisible by block size {bs}")
+    data = jax.device_put(array, NamedSharding(mesh, P()))
+    if block_mask is not None:
+        block_grid = tuple(d // bs for d, bs in
+                           zip(np.shape(array), block_sizes))
+        if block_mask.shape != block_grid:
+            raise ValueError(
+                f"block_mask shape {block_mask.shape} != block grid "
+                f"{block_grid}")
+        block_mask = np.ascontiguousarray(block_mask, dtype=bool)
+        full = _expand_mask(block_mask, block_sizes)
+        data = data * jnp.asarray(full, dtype=data.dtype)
+    out = DBCSRTensor(data, block_sizes, grid, block_mask)
+    if compute_norms:
+        out.norms()
+    return out

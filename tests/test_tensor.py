@@ -1,0 +1,506 @@
+"""Tensor subsystem battery (repro.tensor): einsum front-end property
+tests, unfold/fold round trips, layout-exhaustive contraction identity
+vs the hand-matricized 2D multiply and the dense einsum oracle, eps
+filtering, ABFT verify= in the refolded frame, rank-exact threading,
+planner layout caching, and the obs contract span/scoreboard wiring.
+
+Single-device tests run inline on the default 1-device backend (the
+conftest contract); 2x2-mesh coverage runs in one subprocess with its
+own XLA_FLAGS, mirroring tests/test_distributed.py's pattern.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from conftest import run_subprocess_devices
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.compat import make_mesh  # noqa: E402
+from repro.core import dbcsr  # noqa: E402
+from repro.core.blocking import GridSpec  # noqa: E402
+from repro.robustness import chaos  # noqa: E402
+from repro.robustness.guards import DbcsrValidationError  # noqa: E402
+from repro.tensor import (DBCSRTensor, EinsumSpecError,  # noqa: E402
+                          contract, create_tensor, enumerate_layouts,
+                          parse_contraction)
+from repro.tensor.matricize import (contraction_layout_stats,  # noqa: E402
+                                    fold_array, fold_grid, fold_to_tensor,
+                                    layout_operands, unfold_array,
+                                    unfold_grid, unfold_tensor)
+
+EXEC_KW = dict(densify=False, local_kernel="ref", pipeline_depth=1)
+
+
+def _mesh11():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def _grid():
+    return GridSpec("data", "model")
+
+
+def _tensor(rng, shape, block_sizes, *, fill=1.0, mesh=None):
+    data = rng.randn(*shape).astype(np.float32)
+    mask = None
+    if fill < 1.0:
+        bg = tuple(d // b for d, b in zip(shape, block_sizes))
+        mask = rng.rand(*bg) < fill
+        mask.flat[0] = True
+    return create_tensor(data, mesh=mesh, grid=_grid(),
+                         block_sizes=block_sizes, block_mask=mask)
+
+
+# ---------------------------------------------------------------------------
+# einsum front-end: property tests (exhaustive enumeration, no hypothesis)
+# ---------------------------------------------------------------------------
+
+def _valid_specs():
+    """Every valid two-operand spec shape over 2-4 index tensors:
+    all contracted-subset choices and orders, contracted placed at
+    either end of B, and several output permutations."""
+    letters = "abcdefg"
+    specs = set()
+    for na in (2, 3, 4):
+        a_idx = tuple(letters[:na])
+        for nb in (2, 3, 4):
+            for nc in range(1, min(na, nb) + 1):
+                for ksub in itertools.combinations(a_idx, nc):
+                    b_free = tuple(letters[na:na + nb - nc])
+                    for korder in {ksub, ksub[::-1]}:
+                        for b_idx in {korder + b_free, b_free + korder}:
+                            a_free = tuple(x for x in a_idx
+                                           if x not in ksub)
+                            free = a_free + b_free
+                            outs = {free, free[::-1]}
+                            if len(free) > 1:
+                                outs.add(free[1:] + free[:1])
+                            for out in outs:
+                                specs.add(f"{''.join(a_idx)},"
+                                          f"{''.join(b_idx)}->"
+                                          f"{''.join(out)}")
+    return sorted(specs)
+
+
+def test_spec_parsing_round_trips_exhaustively():
+    specs = _valid_specs()
+    assert len(specs) > 200  # a real property sweep, not a handful
+    for s in specs:
+        p = parse_contraction(s)
+        # round trip: the normalized spelling re-parses to itself
+        assert p.normalized == s
+        assert parse_contraction(p.normalized) == p
+        # group laws: contracted = A intersect B, free partitioned,
+        # output a permutation of the free union
+        a_set, b_set = set(p.a_indices), set(p.b_indices)
+        assert set(p.contracted) == a_set & b_set
+        assert set(p.a_free) == a_set - b_set
+        assert set(p.b_free) == b_set - a_set
+        assert sorted(p.out_indices) == sorted(p.a_free + p.b_free)
+        # layouts: every enumerated one is distinct and label-stable
+        layouts = enumerate_layouts(p)
+        assert len(set(layouts)) == len(layouts)
+        assert len({L.label for L in layouts}) == len(layouts)
+
+
+def test_spec_parsing_tolerates_whitespace():
+    assert parse_contraction(" ijk , kl -> ijl ").normalized == "ijk,kl->ijl"
+
+
+@pytest.mark.parametrize("bad", [
+    "ijjk->ik",          # no comma
+    "ij,jk",             # no arrow
+    "ij;jk->ik",         # bad separator
+    "i1,1j->ij",         # non-letter index
+    "",                  # empty
+    "ij,->i",            # empty operand
+    "iij,jk->ik",        # repeated index in A
+    "ij,jkk->ij",        # repeated index in B
+    "ij,jk->ikk",        # repeated index in output
+    "ij,jk->ikz",        # output index in neither operand
+    "ij,jk->ijk",        # batch index (shared + in output)
+    "ij,kl->ijkl",       # outer product: nothing contracted
+    "ij,jk->i",          # sum-reduction: free index dropped
+    "ij,jk->k",          # sum-reduction on the A side
+])
+def test_spec_parsing_rejects_malformed(bad):
+    with pytest.raises(EinsumSpecError):
+        parse_contraction(bad)
+    # the typed-taxonomy contract: catchable as DbcsrValidationError
+    with pytest.raises(DbcsrValidationError):
+        parse_contraction(bad)
+
+
+def test_mismatched_operands_raise_typed_errors(rng):
+    mesh = _mesh11()
+    A = _tensor(rng, (16, 8, 32), (8, 4, 8), mesh=mesh)
+    with pytest.raises(DbcsrValidationError):  # rank vs subscript
+        contract("ij,jk->ik", A, A, mesh=mesh)
+    B_dim = _tensor(rng, (16, 16), (8, 8), mesh=mesh)
+    with pytest.raises(DbcsrValidationError):  # shared dim mismatch
+        contract("ijk,kl->ijl", A, B_dim, mesh=mesh)
+    B_blk = _tensor(rng, (32, 16), (16, 8), mesh=mesh)
+    with pytest.raises(DbcsrValidationError):  # shared block mismatch
+        contract("ijk,kl->ijl", A, B_blk, mesh=mesh)
+    B_ok = _tensor(rng, (32, 16), (8, 8), mesh=mesh)
+    with pytest.raises(EinsumSpecError):       # unknown pinned layout
+        contract("ijk,kl->ijl", A, B_ok, mesh=mesh, layout="(zz|z)@(z|z)")
+
+
+# ---------------------------------------------------------------------------
+# unfold / fold: exact inverses at every group split
+# ---------------------------------------------------------------------------
+
+def test_unfold_fold_round_trip_all_splits(rng):
+    indices = ("i", "j", "k")
+    shape, bsizes = (12, 8, 6), (4, 2, 3)
+    x = rng.randn(*shape).astype(np.float32)
+    g = rng.randn(*(d // b for d, b in zip(shape, bsizes))) \
+        .astype(np.float32)
+    dims = dict(zip(indices, shape))
+    bs = dict(zip(indices, bsizes))
+    nb = {l: dims[l] // bs[l] for l in indices}
+    for r in (1, 2):
+        for rows in itertools.permutations(indices, r):
+            rest = [l for l in indices if l not in rows]
+            for cols in itertools.permutations(rest):
+                y = unfold_array(x, indices, rows, cols, bsizes)
+                assert y.shape == (
+                    np.prod([dims[l] for l in rows]),
+                    np.prod([dims[l] for l in cols]))
+                back = fold_array(np.asarray(y), indices, rows, cols,
+                                  nb, bs)
+                assert np.array_equal(back, x)
+                g2 = unfold_grid(g, indices, rows, cols)
+                gback = fold_grid(g2, indices, rows, cols, nb)
+                assert np.array_equal(gback, g)
+
+
+def test_unfold_lowers_mask_and_norms_exactly(rng):
+    # an N-d block is retained iff its matricized image is, and the
+    # lowered norms equal the 2D view's own norms (norm exactness)
+    mesh = _mesh11()
+    A = _tensor(rng, (16, 8, 32), (8, 4, 8), fill=0.5, mesh=mesh)
+    A.norms()
+    m2 = unfold_tensor(A, ("i", "j", "k"), ("i", "j"), ("k",), mesh=mesh)
+    assert int(m2.block_mask.sum()) == int(A.block_mask.sum())
+    recomputed = m2.norms(recompute=True)
+    np.testing.assert_allclose(
+        unfold_grid(A.block_norms, ("i", "j", "k"), ("i", "j"), ("k",)),
+        recomputed, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# contraction identity: every layout, bitwise vs hand-matricized,
+# allclose vs the dense einsum oracle; eps in {None, 0} bitwise
+# ---------------------------------------------------------------------------
+
+SPECS = [
+    # (spec, a shape, a blocks, b shape, b blocks): 2-, 3-, 4-index
+    ("ij,jk->ik", (32, 32), (8, 8), (32, 16), (8, 8)),
+    ("ijk,kl->ijl", (16, 8, 32), (8, 4, 8), (32, 16), (8, 8)),
+    ("abcd,ce->abde", (8, 8, 8, 8), (4, 4, 4, 4), (8, 8), (4, 4)),
+]
+
+
+@pytest.mark.parametrize("fill", [1.0, 0.5, 0.05])
+@pytest.mark.parametrize("case", SPECS, ids=[s[0] for s in SPECS])
+def test_contract_every_layout_bitwise_and_oracle(rng, case, fill):
+    spec, ash, abs_, bsh, bbs = case
+    mesh = _mesh11()
+    A = _tensor(rng, ash, abs_, fill=fill, mesh=mesh)
+    B = _tensor(rng, bsh, bbs, fill=fill, mesh=mesh)
+    con = parse_contraction(spec)
+    oracle = np.einsum(spec, np.asarray(A.data), np.asarray(B.data))
+    dims = {**dict(zip(con.a_indices, A.shape)),
+            **dict(zip(con.b_indices, B.shape))}
+    bs = {**dict(zip(con.a_indices, A.block_sizes)),
+          **dict(zip(con.b_indices, B.block_sizes))}
+    scale = max(float(np.abs(oracle).max()), 1.0)
+    for L in enumerate_layouts(con):
+        C, plan = contract(spec, A, B, mesh=mesh, layout=L,
+                           return_plan=True, **EXEC_KW)
+        assert plan.layout == L.label
+        assert plan.plan.layout == L.label
+        # allclose to the dense oracle
+        assert np.abs(np.asarray(C.data) - oracle).max() < 1e-5 * scale
+        # bitwise identical to refolding the hand-matricized multiply
+        lsrc, lrows, lcols, rsrc, rrows, rcols, crows, ccols = \
+            layout_operands(con, L)
+        left, lidx = (A, con.a_indices) if lsrc == "a" \
+            else (B, con.b_indices)
+        right, ridx = (B, con.b_indices) if rsrc == "b" \
+            else (A, con.a_indices)
+        ma = unfold_tensor(left, lidx, lrows, lcols, mesh=mesh)
+        mb = unfold_tensor(right, ridx, rrows, rcols, mesh=mesh)
+        hand_kw = {**EXEC_KW, "densify": plan.plan.densify}
+        c2d = dbcsr.multiply(ma, mb, mesh=mesh,
+                             algorithm=plan.plan.algorithm, **hand_kw)
+        hand = fold_to_tensor(c2d, con.out_indices, crows, ccols,
+                              dims, bs, A.grid, mesh=mesh)
+        assert np.array_equal(np.asarray(C.data), np.asarray(hand.data))
+        if C.block_mask is not None:
+            assert np.array_equal(C.block_mask, hand.block_mask)
+        # eps=0 retains everything: bitwise identical to eps=None
+        C0 = contract(spec, A, B, mesh=mesh, layout=L, filter_eps=0.0,
+                      **EXEC_KW)
+        assert np.array_equal(np.asarray(C.data), np.asarray(C0.data))
+
+
+def test_contract_filter_eps_subtractive(rng):
+    # eps drops triples with ||A_blk||*||B_blk|| < eps: block-row i=1
+    # of A is scaled to ~1e-9, so every output block there loses all
+    # its contributions while i=0 keeps every one (hence stays bitwise)
+    mesh = _mesh11()
+    data = rng.randn(16, 8, 32).astype(np.float32)
+    data[8:] *= 1e-9
+    A = create_tensor(data, mesh=mesh, grid=_grid(),
+                      block_sizes=(8, 4, 8))
+    B = _tensor(rng, (32, 16), (8, 8), mesh=mesh)
+    C0 = contract("ijk,kl->ijl", A, B, mesh=mesh, **EXEC_KW)
+    Ce = contract("ijk,kl->ijl", A, B, mesh=mesh, filter_eps=1.0,
+                  **EXEC_KW)
+    assert Ce.block_mask is not None
+    assert Ce.block_mask[0].all()
+    assert not Ce.block_mask[1].any()
+    data0, datae = np.asarray(C0.data), np.asarray(Ce.data)
+    assert np.array_equal(datae[:8], data0[:8])  # untouched rows bitwise
+    assert not datae[8:].any()                   # dropped rows zeroed
+
+
+# ---------------------------------------------------------------------------
+# verify= / rank_exact= threading (satellite: ABFT in the tensor frame)
+# ---------------------------------------------------------------------------
+
+def test_contract_verify_detects_localizes_repairs_in_tensor_frame(rng):
+    mesh = _mesh11()
+    A = _tensor(rng, (16, 8, 32), (8, 4, 8), fill=0.8, mesh=mesh)
+    B = _tensor(rng, (32, 16), (8, 8), fill=0.8, mesh=mesh)
+    L = enumerate_layouts(parse_contraction("ijk,kl->ijl"))[0]
+    kw = dict(mesh=mesh, layout=L, **EXEC_KW)
+
+    clean = contract("ijk,kl->ijl", A, B, **kw)
+    assert clean.verification is None
+
+    cv = contract("ijk,kl->ijl", A, B, verify="checksum", **kw)
+    assert cv.verification["enabled"]
+    assert not cv.verification["report"].detected
+    assert np.array_equal(np.asarray(cv.data), np.asarray(clean.data))
+
+    # corrupt one block of the MATRICIZED product mid-flight: the
+    # layout (ij|k)@(k|l) has 2D blocks of (8*4, 8)
+    hook = chaos.FaultInjector(seed=7).one_shot_result_hook(
+        1, 1, block_m=32, block_n=8, mode="bitflip")
+    with chaos.result_corruption(hook):
+        cr = contract("ijk,kl->ijl", A, B, verify="checksum", **kw)
+    rep = cr.verification["report"]
+    assert rep.detected
+    assert rep.flagged_blocks == ((1, 1),)
+    assert rep.repaired and rep.n_recomputed_blocks >= 1
+    # the repair lands in the REFOLDED tensor frame: bitwise clean
+    assert np.array_equal(np.asarray(cr.data), np.asarray(clean.data))
+    # and the plan the result carries reports the verification outcome
+    assert cr.last_plan.verification["report"].detected
+
+
+def test_contract_battery_2x2_mesh_with_rank_exact():
+    # {2,3,4}-index specs x fills on a 2x2 mesh (own XLA_FLAGS), plus
+    # rank_exact=True/False bitwise agreement on a rank-independent
+    # schedule and verify= threading
+    code = """
+import numpy as np
+from repro.compat import make_mesh
+from repro.core.blocking import GridSpec
+from repro.tensor import contract, create_tensor
+
+rng = np.random.RandomState(0)
+mesh = make_mesh((2, 2), ("data", "model"))
+grid = GridSpec("data", "model")
+EXEC_KW = dict(densify=False, local_kernel="ref", pipeline_depth=1)
+
+def tensor(shape, blocks, fill):
+    data = rng.randn(*shape).astype(np.float32)
+    mask = None
+    if fill < 1.0:
+        bg = tuple(d // b for d, b in zip(shape, blocks))
+        mask = rng.rand(*bg) < fill
+        mask.flat[0] = True
+    return create_tensor(data, mesh=mesh, grid=grid, block_sizes=blocks,
+                         block_mask=mask)
+
+SPECS = [
+    ("ij,jk->ik", (32, 32), (8, 8), (32, 16), (8, 8)),
+    ("ijk,kl->ijl", (16, 8, 32), (8, 4, 8), (32, 16), (8, 8)),
+    ("abcd,ce->abde", (8, 8, 8, 8), (4, 4, 4, 4), (8, 8), (4, 4)),
+]
+for spec, ash, abs_, bsh, bbs in SPECS:
+    for fill in (1.0, 0.5, 0.05):
+        A = tensor(ash, abs_, fill)
+        B = tensor(bsh, bbs, fill)
+        C, plan = contract(spec, A, B, mesh=mesh, return_plan=True,
+                           **EXEC_KW)
+        oracle = np.einsum(spec, np.asarray(A.data), np.asarray(B.data))
+        scale = max(float(np.abs(oracle).max()), 1.0)
+        err = np.abs(np.asarray(C.data) - oracle).max()
+        assert err < 1e-5 * scale, (spec, fill, err)
+        assert C.shape == oracle.shape
+
+# rank-exact vs union: bitwise on a rank-independent K-order schedule
+A = tensor((16, 8, 32), (8, 4, 8), 0.4)
+B = tensor((32, 16), (8, 8), 0.4)
+kw = dict(mesh=mesh, algorithm="summa", **EXEC_KW)
+Cr, pr_ = contract("ijk,kl->ijl", A, B, rank_exact=True,
+                   return_plan=True, **kw)
+Cu = contract("ijk,kl->ijl", A, B, rank_exact=False, **kw)
+assert np.array_equal(np.asarray(Cr.data), np.asarray(Cu.data))
+assert pr_.plan.rank_imbalance >= 1.0
+Cv = contract("ijk,kl->ijl", A, B, verify="checksum", **kw)
+assert Cv.verification["enabled"]
+assert not Cv.verification["report"].detected
+print("2x2 battery OK")
+"""
+    out = run_subprocess_devices(code, n_devices=4)
+    assert "2x2 battery OK" in out
+
+
+# ---------------------------------------------------------------------------
+# planner: layout costing + contraction-signature cache
+# ---------------------------------------------------------------------------
+
+def test_plan_contract_caches_on_contraction_signature(rng):
+    from repro.planner import cost_model
+    from repro.planner.plan import contract_cache_clear
+
+    mesh = _mesh11()
+    A = _tensor(rng, (16, 8, 32), (8, 4, 8), fill=0.5, mesh=mesh)
+    B = _tensor(rng, (32, 16), (8, 8), fill=0.5, mesh=mesh)
+    contract_cache_clear()
+    C1, p1 = contract("ijk,kl->ijl", A, B, mesh=mesh, return_plan=True,
+                      **EXEC_KW)
+    n0 = cost_model.N_EVALS
+    C2, p2 = contract("ijk,kl->ijl", A, B, mesh=mesh, return_plan=True,
+                      **EXEC_KW)
+    assert cost_model.N_EVALS == n0  # zero evaluations on the repeat
+    assert p2.layout == p1.layout
+    assert np.array_equal(np.asarray(C1.data), np.asarray(C2.data))
+    # a different mask is a different signature -> replan, not a stale hit
+    A2 = _tensor(rng, (16, 8, 32), (8, 4, 8), fill=0.3, mesh=mesh)
+    contract("ijk,kl->ijl", A2, B, mesh=mesh, **EXEC_KW)
+    assert cost_model.N_EVALS > n0
+
+
+def test_plan_contract_explain_has_layout_column(rng):
+    mesh = _mesh11()
+    A = _tensor(rng, (16, 8, 32), (8, 4, 8), fill=0.5, mesh=mesh)
+    B = _tensor(rng, (32, 16), (8, 8), fill=0.5, mesh=mesh)
+    _, plan = contract("ijk,kl->ijl", A, B, mesh=mesh, return_plan=True,
+                       **EXEC_KW)
+    text = plan.explain()
+    assert "layout" in text
+    for L in enumerate_layouts(parse_contraction("ijk,kl->ijl")):
+        assert L.label in text           # every candidate layout listed
+    assert f"layout={plan.layout}" in text
+    assert plan.chosen is not None and plan.chosen.feasible
+    # executed stats grafted from the inner multiply
+    assert plan.plan.executor_stats is not None
+
+
+def test_layout_stats_occupancy_invariant_imbalance_not(rng):
+    # the retained-triple set is layout-invariant; its arrangement over
+    # ranks is not — a block-row-structured mask balances differently
+    # matricized (i|jk) vs (j|ik)
+    con = parse_contraction("ijk,kl->ijl")
+    mesh = _mesh11()
+    mask = np.zeros((4, 2, 4), dtype=bool)
+    mask[0] = True  # all occupancy in one i block-row
+    A = create_tensor(np.random.RandomState(3).randn(16, 8, 32)
+                      .astype(np.float32), mesh=mesh, grid=_grid(),
+                      block_sizes=(4, 4, 8), block_mask=mask)
+    B = _tensor(np.random.RandomState(4), (32, 16), (8, 8), mesh=mesh)
+    occ = set()
+    for L in enumerate_layouts(con):
+        s = contraction_layout_stats(con, L, A, B, mesh_shape=(2, 2))
+        occ.add(round(s.occupancy, 12))
+        assert s.m * s.n * s.k == 16 * 8 * 32 * 16
+    assert len(occ) == 1
+
+
+# ---------------------------------------------------------------------------
+# container: pytree round trip, norms, filter
+# ---------------------------------------------------------------------------
+
+def test_tensor_pytree_round_trip(rng):
+    mesh = _mesh11()
+    A = _tensor(rng, (16, 8, 32), (8, 4, 8), fill=0.5, mesh=mesh)
+    A.norms()
+    leaves, treedef = jax.tree_util.tree_flatten(A)
+    A2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(A2, DBCSRTensor)
+    assert A2.block_sizes == A.block_sizes
+    assert np.array_equal(A2.block_mask, A.block_mask)
+    assert np.array_equal(A2.block_norms, A.block_norms)
+    assert np.array_equal(np.asarray(A2.data), np.asarray(A.data))
+
+
+def test_tensor_filter_and_occupancy(rng):
+    mesh = _mesh11()
+    A = _tensor(rng, (16, 8, 32), (8, 4, 8), fill=0.5, mesh=mesh)
+    filt = A.filter(1e30)
+    assert filt.occupancy == 0.0
+    assert not np.asarray(filt.data).any()
+    keep = A.filter(0.0)
+    assert np.array_equal(keep.block_mask, A.block_mask)
+    assert np.array_equal(np.asarray(keep.data), np.asarray(A.data))
+
+
+# ---------------------------------------------------------------------------
+# obs: contract -> matricize -> multiply span tree + scoreboard rows
+# ---------------------------------------------------------------------------
+
+def test_contract_span_tree_and_outcome_row(rng, tmp_path):
+    from repro import obs
+
+    mesh = _mesh11()
+    A = _tensor(rng, (16, 8, 32), (8, 4, 8), fill=0.5, mesh=mesh)
+    B = _tensor(rng, (32, 16), (8, 8), fill=0.5, mesh=mesh)
+    obs.enable(log_dir=str(tmp_path))
+    try:
+        obs.clear_plan_outcomes()
+        contract("ijk,kl->ijl", A, B, mesh=mesh, **EXEC_KW)
+        spans = obs.last_trace()
+        outcomes = list(obs.plan_outcomes())
+    finally:
+        obs.disable()
+    roots = [s for s in spans if s.parent_id is None]
+    assert [r.name for r in roots] == ["contract"]
+    kids = [s.name for s in spans if s.parent_id == roots[0].span_id]
+    assert "matricize" in kids and "multiply" in kids and "plan" in kids
+    rows = [r for r in outcomes if r.get("kind") == "contract"]
+    assert len(rows) == 1
+    row = rows[0]
+    assert row["algorithm"] and row["layout"]
+    assert row["predicted_s"] > 0 and row["measured_s"] > 0
+    # the inner multiply recorded its own row too, schema unchanged
+    assert any(r.get("kind") == "multiply" for r in outcomes)
+
+
+def test_scoreboard_groups_contract_rows_without_breaking_drift():
+    from repro.obs.scoreboard import check_drift, planner_scoreboard
+
+    records = [
+        {"kind": "multiply", "algorithm": "summa",
+         "predicted_s": 1e-3, "measured_s": 1e-3},
+        {"algorithm": "cannon",            # legacy row without kind
+         "predicted_s": 2e-3, "measured_s": 2e-3},
+        {"kind": "contract", "algorithm": "summa",
+         "layout": "(ij|k)@(k|l)",
+         "predicted_s": 3e-3, "measured_s": 4e-3},
+    ]
+    sb = planner_scoreboard(records)
+    # multiply rows keep the bare-algorithm key calibrate thresholds on
+    assert set(sb) == {"summa", "cannon", "contract:summa"}
+    assert sb["summa"]["n"] == 1
+    drift = check_drift(records, threshold=1.0)
+    assert drift["ok"]
